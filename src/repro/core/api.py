@@ -1,0 +1,131 @@
+"""User-facing commands — §2.1.
+
+"the interface is made of independent commands for submission (command
+*oarsub*), cancellation (command *oardel*) or the monitoring (command
+*oarstat*). These commands are as separated as possible from the rest of the
+system, they send or retrieve information using directly the database and
+they interact with OAR modules by sending notifications to the central
+module."
+
+Each function below is such a command: DB in, DB out, one notification.
+"""
+
+from __future__ import annotations
+
+import json
+import time as _time
+from typing import Any
+
+from repro.core import jobstate
+from repro.core.admission import AdmissionError, run_admission
+from repro.core.matching import validate_properties
+
+__all__ = ["oarsub", "oardel", "oarstat", "oarhold", "oarresume", "oarnodes",
+           "add_resources", "remove_resources", "AdmissionError"]
+
+
+def oarsub(db, command: str | dict, *, user: str = "user", queue: str | None = None,
+           nb_nodes: int = 1, weight: int = 1, max_time: float = 3600.0,
+           properties: str = "", reservation_start: float | None = None,
+           job_type: str = "PASSIVE", info_type: str = "",
+           launching_directory: str = "", best_effort: bool | None = None,
+           clock=None) -> int:
+    """Submit a job. Returns its idJob (its index in the jobs table).
+
+    Figure 3 flow: fetch admission rules from the DB → rules fill defaults
+    and validate → insert into jobs table → return id to the user → notify
+    the central module ("taken into account only if no scheduling was
+    already planned" — the coalescing lives in CentralModule.notify).
+    """
+    clock = clock or _time.time
+    if isinstance(command, dict):
+        command = json.dumps(command)
+    job: dict[str, Any] = {
+        "jobType": job_type, "infoType": info_type, "user": user,
+        "nbNodes": nb_nodes, "weight": weight, "command": command,
+        "maxTime": max_time, "properties": validate_properties(properties),
+        "launchingDirectory": launching_directory,
+        "reservationStart": reservation_start,
+    }
+    if queue is not None:
+        job["queueName"] = queue
+    if best_effort is not None:
+        job["bestEffort"] = int(best_effort)
+    run_admission(db, job)  # raises AdmissionError on rejection
+    with db.transaction() as cur:
+        cur.execute(
+            "INSERT INTO jobs(jobType, infoType, user, nbNodes, weight, command,"
+            " queueName, maxTime, properties, launchingDirectory, submissionTime,"
+            " reservation, reservationStart, bestEffort, message)"
+            " VALUES (?,?,?,?,?,?,?,?,?,?,?,?,?,?,?)",
+            (job["jobType"], job["infoType"], job["user"], job["nbNodes"],
+             job["weight"], job["command"], job["queueName"], job["maxTime"],
+             job["properties"], job["launchingDirectory"], clock(),
+             job.get("reservation", "None"), job.get("reservationStart"),
+             job.get("bestEffort", 0), "submitted"))
+        job_id = cur.lastrowid
+    db.log_event("oarsub", "info", f"job {job_id} submitted by {user}", job_id)
+    db.notify("submission")
+    return job_id
+
+
+def oardel(db, job_id: int) -> None:
+    """Cancel a job: flag it; the generic cancellation module does the kill."""
+    with db.transaction() as cur:
+        cur.execute("UPDATE jobs SET toCancel=1 WHERE idJob=?", (job_id,))
+    db.log_event("oardel", "info", "cancellation requested", job_id)
+    db.notify("cancel")
+
+
+def oarhold(db, job_id: int) -> None:
+    jobstate.set_state(db, job_id, jobstate.HOLD)
+
+
+def oarresume(db, job_id: int) -> None:
+    jobstate.set_state(db, job_id, jobstate.WAITING)
+    db.notify("submission")
+
+
+def oarstat(db, job_id: int | None = None) -> list[dict]:
+    """Monitoring: job rows, plain dicts (the DB is directly exploitable —
+    'user-friendly logging information analysis' is a SELECT away)."""
+    if job_id is None:
+        rows = db.query("SELECT * FROM jobs ORDER BY idJob")
+    else:
+        rows = db.query("SELECT * FROM jobs WHERE idJob=?", (job_id,))
+    return [dict(r) for r in rows]
+
+
+def oarnodes(db) -> list[dict]:
+    rows = db.query(
+        "SELECT r.*, (SELECT COUNT(*) FROM assignments a JOIN jobs j "
+        " ON j.idJob=a.idJob WHERE a.idResource=r.idResource AND "
+        " j.state IN ('toLaunch','Launching','Running')) AS busy "
+        "FROM resources r ORDER BY idResource")
+    return [dict(r) for r in rows]
+
+
+# ----------------------------------------------------------- administration
+def add_resources(db, hostnames: list[str], *, weight: int = 1, pod: int = 0,
+                  switch: str = "sw0", mem_gb: int = 16,
+                  chip: str = "tpu-v5e") -> list[int]:
+    """Elastic scale-up: new rows are schedulable from the next pass."""
+    ids = []
+    with db.transaction() as cur:
+        for h in hostnames:
+            cur.execute(
+                "INSERT INTO resources(hostname, weight, pod, switch, mem_gb, chip)"
+                " VALUES (?,?,?,?,?,?)", (h, weight, pod, switch, mem_gb, chip))
+            ids.append(cur.lastrowid)
+    db.notify("scheduler")
+    return ids
+
+
+def remove_resources(db, hostnames: list[str]) -> None:
+    """Elastic scale-down: mark Absent; running jobs there are failed over."""
+    qmarks = ",".join("?" * len(hostnames))
+    with db.transaction() as cur:
+        cur.execute(f"UPDATE resources SET state='Absent' "
+                    f"WHERE hostname IN ({qmarks})", hostnames)
+    db.notify("monitor")
+    db.notify("scheduler")

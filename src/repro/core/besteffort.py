@@ -1,0 +1,54 @@
+"""Best-effort ("Global / Desktop computing") support — §3.3.
+
+The flow the paper describes crosses every layer: the admission module tags
+jobs submitted to the best-effort queue (schema.DEFAULT_ADMISSION_RULES);
+the meta-scheduler sets `toCancel` flags when a regular job needs the
+resources (metascheduler._preempt_besteffort); the generic cancellation
+module kills the flagged jobs (launcher.Executor.run_cancellation). This
+module closes the loop: preempted best-effort jobs are *resubmitted* so the
+multi-parametric workloads they carry eventually finish — "scheduling the
+waiting job when coming back to the scheduler".
+"""
+
+from __future__ import annotations
+
+import time as _time
+
+__all__ = ["resubmit_preempted"]
+
+
+def resubmit_preempted(db, *, clock=None) -> list[int]:
+    """Clone every preempted best-effort job into a fresh Waiting submission.
+
+    A job is 'preempted' (vs plainly failed) when it ended in Error with the
+    preemption message the scheduler wrote. The clone keeps the original's
+    spec and checkpointPath, so a checkpoint-aware payload resumes instead of
+    restarting — the data-plane upgrade of the paper's restart-from-scratch.
+    Returns new job ids.
+    """
+    clock = clock or _time.time
+    now = clock()
+    rows = db.query(
+        "SELECT * FROM jobs WHERE state='Error' AND bestEffort=1 "
+        "AND message LIKE 'preempted:%' AND message NOT LIKE '%[resubmitted]' "
+        "AND toCancel=0")
+    new_ids = []
+    with db.transaction() as cur:
+        for job in rows:
+            cur.execute(
+                "INSERT INTO jobs(jobType, infoType, state, user, nbNodes, weight,"
+                " command, queueName, maxTime, properties, launchingDirectory,"
+                " submissionTime, bestEffort, checkpointPath, message)"
+                " VALUES (?,?,?,?,?,?,?,?,?,?,?,?,?,?,?)",
+                (job["jobType"], job["infoType"], "Waiting", job["user"],
+                 job["nbNodes"], job["weight"], job["command"], job["queueName"],
+                 job["maxTime"], job["properties"], job["launchingDirectory"],
+                 now, 1, job["checkpointPath"],
+                 f"resubmission of preempted job {job['idJob']}"))
+            new_ids.append(cur.lastrowid)
+            # mark the ancestor so we do not clone it twice
+            cur.execute("UPDATE jobs SET message = message || ' [resubmitted]' "
+                        "WHERE idJob=?", (job["idJob"],))
+    if new_ids:
+        db.notify("scheduler")
+    return new_ids

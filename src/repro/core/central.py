@@ -1,0 +1,129 @@
+"""The central module — §2.2.
+
+"This central module is made of two interconnected parts. The main part is
+an automaton that reads its entries from a buffer of events and from the
+return values of the modules. The second part [...] is in charge of
+listening for external notifications, discarding the redundant ones and
+planing the next tasks required by users."
+
+Key properties reproduced:
+
+* **Reactivity** — a notification triggers an immediate pass "if it is not
+  busy doing some other task"; while busy, notifications coalesce (a pending
+  bit per task kind, not a queue of payloads — they carry no payload).
+* **Robustness by periodic redundancy** — every task also runs on a period,
+  so lost notifications, by-hand DB edits or a crashed module never wedge
+  the system; the system converges as long as the DB is coherent.
+* The central module itself is stateless across restarts: kill it, restart
+  it against the same DB, and the next periodic pass resumes everything
+  (tested in tests/test_recovery.py).
+"""
+
+from __future__ import annotations
+
+import time as _time
+from typing import Callable
+
+from repro.core import besteffort
+from repro.core.launcher import Executor, TaktukLauncher
+from repro.core.metascheduler import MetaScheduler
+
+__all__ = ["CentralModule"]
+
+# task kinds the automaton knows; notification tags map onto them
+TASKS = ("scheduler", "launcher", "cancel", "monitor", "resubmit")
+_TAG_TO_TASKS = {
+    "submission": ("scheduler",),
+    "jobstate": ("launcher",),
+    "scheduler": ("scheduler",),
+    "cancel": ("cancel", "resubmit", "scheduler"),
+    "monitor": ("monitor",),
+}
+
+
+class CentralModule:
+    """Automaton + notification listener, driven by ``tick()``.
+
+    ``tick`` is callable from a wall-clock daemon loop (:meth:`run_forever`)
+    or from the discrete-event simulator (virtual clock) — same code path.
+    """
+
+    def __init__(self, db, *, clock: Callable[[], float] | None = None,
+                 scheduler: MetaScheduler | None = None,
+                 executor: Executor | None = None,
+                 periods: dict[str, float] | None = None):
+        self.db = db
+        self.clock = clock or _time.time
+        self.scheduler = scheduler or MetaScheduler(db, clock=self.clock)
+        self.executor = executor or Executor(db, clock=self.clock,
+                                             launcher=TaktukLauncher())
+        # periodic redundancy (§2.2): every task re-runs at least this often
+        self.periods = {"scheduler": 30.0, "launcher": 5.0, "cancel": 10.0,
+                        "monitor": 60.0, "resubmit": 30.0}
+        if periods:
+            self.periods.update(periods)
+        self._pending: set[str] = set(TASKS)   # run everything on first tick
+        self._last_run: dict[str, float] = {t: -float("inf") for t in TASKS}
+        self._busy = False
+        self.stats = {"notifications": 0, "discarded": 0, "passes": 0}
+        db.add_notify_hook(self.notify)
+
+    # --------------------------------------------------------- notifications
+    def notify(self, tag: str) -> None:
+        """Listener part: map the tag to tasks; redundant ones coalesce."""
+        self.stats["notifications"] += 1
+        for task in _TAG_TO_TASKS.get(tag, ("scheduler",)):
+            if task in self._pending:
+                self.stats["discarded"] += 1   # "discarding the redundant ones"
+            self._pending.add(task)
+
+    # -------------------------------------------------------------- automaton
+    def tick(self) -> dict:
+        """One automaton step: run every due task (notified or periodic)."""
+        if self._busy:   # re-entrancy guard: notifications during a pass wait
+            return {}
+        self._busy = True
+        try:
+            now = self.clock()
+            due = set(self._pending)
+            for task, period in self.periods.items():
+                if now - self._last_run[task] >= period:
+                    due.add(task)
+            self._pending.clear()
+            report: dict = {}
+            # fixed order mirrors the paper's submission→schedule→execute flow
+            if "monitor" in due:
+                rep = self.executor.monitor_nodes()
+                report["monitor"] = {"failed": rep.failed}
+                self._last_run["monitor"] = now
+            if "cancel" in due:
+                report["cancelled"] = self.executor.run_cancellation()
+                self._last_run["cancel"] = now
+            if "resubmit" in due:
+                report["resubmitted"] = besteffort.resubmit_preempted(
+                    self.db, clock=self.clock)
+                self._last_run["resubmit"] = now
+            if "scheduler" in due:
+                report["schedule"] = self.scheduler.run()
+                self._last_run["scheduler"] = now
+            if "launcher" in due or "scheduler" in due:
+                self.executor.reap_walltime_exceeded()
+                report["launched"] = self.executor.launch_pending()
+                self._last_run["launcher"] = now
+            self.stats["passes"] += 1
+            return report
+        finally:
+            self._busy = False
+            # notifications that arrived mid-pass are now pending; the caller
+            # (daemon loop or simulator) will tick again.
+
+    # ------------------------------------------------------------ daemon loop
+    def run_forever(self, *, poll: float = 0.05,
+                    until: Callable[[], bool] | None = None) -> None:
+        while until is None or not until():
+            self.tick()
+            _time.sleep(poll)
+
+    @property
+    def has_pending(self) -> bool:
+        return bool(self._pending)

@@ -1,0 +1,168 @@
+"""Relational state store — the paper's central design choice.
+
+OAR's thesis (§2): *the database holds all internal data and is the only
+communication medium between modules*. Modules never call each other; they
+read and write tables and (optionally) ping the central module with a
+content-free notification. As long as each module performs atomic
+modifications that leave the store coherent, the engine guarantees data
+safety and crash recovery comes for free.
+
+This module provides that store on sqlite3 (stdlib, offline-runnable). The
+interface is deliberately thin SQL so the engine stays swappable (the paper
+used MySQL). WAL journaling gives the concurrent-reader behaviour the paper
+relies on; a lock serialises writers within a process, mirroring one
+connection per executive module.
+"""
+
+from __future__ import annotations
+
+import os
+import sqlite3
+import threading
+import time
+from contextlib import contextmanager
+from typing import Any, Callable, Iterable, Sequence
+
+from repro.core import schema
+
+__all__ = ["Database", "connect"]
+
+
+class Database:
+    """A handle on the OAR state store.
+
+    One ``Database`` may be shared by every module of a deployment (the
+    paper's modules share one MySQL server). All access goes through
+    :meth:`execute` / :meth:`query` / :meth:`transaction`; there is no ORM —
+    the schema *is* the specification (§2: "the specification of the system
+    is made of semantics description for the tables and relations").
+    """
+
+    def __init__(self, path: str = ":memory:", *, timeout: float = 30.0):
+        self.path = path
+        self._lock = threading.RLock()
+        # check_same_thread=False: the central module's listener thread and
+        # the automaton thread share the handle; our RLock serialises them.
+        self._conn = sqlite3.connect(path, timeout=timeout, check_same_thread=False)
+        self._conn.row_factory = sqlite3.Row
+        self._conn.execute("PRAGMA foreign_keys=ON")
+        if path != ":memory:":
+            self._conn.execute("PRAGMA journal_mode=WAL")
+            self._conn.execute("PRAGMA synchronous=NORMAL")
+        self._notify_hooks: list[Callable[[str], None]] = []
+        self.query_count = 0          # §3.2.2: SQL load accounting
+
+    # ------------------------------------------------------------------ DDL
+    def create_schema(self) -> None:
+        with self.transaction() as cur:
+            for ddl in schema.ALL_TABLES:
+                cur.execute(ddl)
+            for ddl in schema.ALL_INDEXES:
+                cur.execute(ddl)
+        schema.install_defaults(self)
+
+    # ------------------------------------------------------------ execution
+    @contextmanager
+    def transaction(self):
+        """Atomic modification unit.
+
+        The paper's robustness contract: every module change is atomic and
+        leaves the system coherent; the engine handles safety. Nested use
+        joins the outer transaction (sqlite savepoints are overkill here —
+        modules are small, per the design).
+        """
+        with self._lock:
+            cur = self._conn.cursor()
+            in_txn = self._conn.in_transaction
+            try:
+                yield cur
+                if not in_txn or not self._conn.in_transaction:
+                    self._conn.commit()
+                elif not in_txn:
+                    self._conn.commit()
+                else:
+                    pass  # outer transaction will commit
+            except Exception:
+                self._conn.rollback()
+                raise
+            finally:
+                cur.close()
+
+    def execute(self, sql: str, params: Sequence[Any] | dict = ()) -> sqlite3.Cursor:
+        with self._lock:
+            self.query_count += 1
+            cur = self._conn.execute(sql, params)
+            if not self._conn.in_transaction:
+                pass
+            else:
+                self._conn.commit()
+            return cur
+
+    def executemany(self, sql: str, seq: Iterable[Sequence[Any]]) -> None:
+        with self._lock:
+            self._conn.executemany(sql, seq)
+            self._conn.commit()
+
+    def query(self, sql: str, params: Sequence[Any] | dict = ()) -> list[sqlite3.Row]:
+        with self._lock:
+            self.query_count += 1
+            return self._conn.execute(sql, params).fetchall()
+
+    def query_one(self, sql: str, params: Sequence[Any] | dict = ()) -> sqlite3.Row | None:
+        rows = self.query(sql, params)
+        return rows[0] if rows else None
+
+    def scalar(self, sql: str, params: Sequence[Any] | dict = ()) -> Any:
+        row = self.query_one(sql, params)
+        return None if row is None else row[0]
+
+    # ---------------------------------------------------------- notification
+    # §2.1/§2.2: commands "interact with OAR modules by sending notifications
+    # to the central module". The hook list stands in for the socket; the
+    # payload is a tag only — all real information travels through tables.
+    def add_notify_hook(self, hook: Callable[[str], None]) -> None:
+        self._notify_hooks.append(hook)
+
+    def notify(self, tag: str) -> None:
+        for hook in list(self._notify_hooks):
+            hook(tag)
+
+    # -------------------------------------------------------------- logging
+    def log_event(self, module: str, level: str, message: str, job_id: int | None = None) -> None:
+        clock = getattr(self, "clock", None) or time.time
+        with self._lock:
+            self._conn.execute(
+                "INSERT INTO event_log(ts, module, level, job_id, message) VALUES (?,?,?,?,?)",
+                (clock(), module, level, job_id, message),
+            )
+            self._conn.commit()
+
+    # ------------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        with self._lock:
+            self._conn.commit()
+            self._conn.close()
+
+    def checkpoint_wal(self) -> None:
+        if self.path != ":memory:":
+            with self._lock:
+                self._conn.execute("PRAGMA wal_checkpoint(TRUNCATE)")
+
+
+def connect(path: str = ":memory:", *, fresh: bool = False) -> Database:
+    """Open (and initialise, if needed) the state store.
+
+    Crash recovery (§2): reopening the same path after a process failure
+    recovers the complete system state — jobs mid-flight included — because
+    the DB is the only state. ``fresh=True`` starts over.
+    """
+    if fresh and path != ":memory:" and os.path.exists(path):
+        os.remove(path)
+        for suffix in ("-wal", "-shm"):
+            if os.path.exists(path + suffix):
+                os.remove(path + suffix)
+    db = Database(path)
+    have = db.scalar("SELECT COUNT(*) FROM sqlite_master WHERE type='table' AND name='jobs'")
+    if not have:
+        db.create_schema()
+    return db

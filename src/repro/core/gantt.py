@@ -1,0 +1,148 @@
+"""Gantt diagram of resource availability — §2.3.
+
+"This module maintains an internal representation of the available
+ressources similar to a Gantt diagram and updates this diagram by removing
+time slots already reserved. Initially, the only occupied time slots are the
+ones on which some job is executing and the ones that have been reserved."
+
+The representation is a sorted list of time slots; each slot carries the set
+of free resource ids over its interval. Scheduling a job first-fit means
+scanning candidate start boundaries and intersecting free sets over the
+walltime window. This keeps conservative backfilling natural: every queued
+job gets a definite slot, so no job can starve (the paper's no-famine
+default), while idle windows in front of wide jobs are offered to later
+narrow jobs.
+"""
+
+from __future__ import annotations
+
+import bisect
+import math
+from dataclasses import dataclass, field
+
+INF = math.inf
+
+__all__ = ["Gantt", "Slot"]
+
+
+@dataclass
+class Slot:
+    start: float
+    stop: float
+    free: set[int] = field(default_factory=set)
+
+    def __repr__(self):  # pragma: no cover - debug aid
+        stop = "inf" if self.stop == INF else f"{self.stop:.1f}"
+        return f"Slot[{self.start:.1f},{stop}) free={len(self.free)}"
+
+
+class Gantt:
+    """Availability timeline over a fixed resource set, from ``origin``."""
+
+    def __init__(self, resources: set[int], origin: float):
+        self.origin = float(origin)
+        self.all_resources = set(resources)
+        self.slots: list[Slot] = [Slot(self.origin, INF, set(resources))]
+
+    # ------------------------------------------------------------ mutation
+    def _boundary(self, t: float) -> None:
+        """Ensure ``t`` is a slot boundary (split the covering slot)."""
+        if t <= self.origin or t == INF:
+            return
+        starts = [s.start for s in self.slots]
+        i = bisect.bisect_right(starts, t) - 1
+        s = self.slots[i]
+        if s.start == t or s.stop <= t:
+            return
+        self.slots[i] = Slot(s.start, t, set(s.free))
+        self.slots.insert(i + 1, Slot(t, s.stop, set(s.free)))
+
+    def occupy(self, rids: set[int], start: float, stop: float) -> None:
+        """Remove ``rids`` from the free sets over [start, stop)."""
+        start = max(start, self.origin)
+        if stop <= start:
+            return
+        self._boundary(start)
+        self._boundary(stop)
+        for s in self.slots:
+            if s.start >= stop:
+                break
+            if s.stop > start and s.start >= start:
+                s.free -= rids
+
+    def release(self, rids: set[int], start: float, stop: float) -> None:
+        """Re-add ``rids`` over [start, stop) (used by preemption re-planning)."""
+        start = max(start, self.origin)
+        self._boundary(start)
+        self._boundary(stop)
+        for s in self.slots:
+            if s.start >= stop:
+                break
+            if s.start >= start:
+                s.free |= rids & self.all_resources
+
+    # ------------------------------------------------------------- queries
+    def free_at(self, t: float) -> set[int]:
+        starts = [s.start for s in self.slots]
+        i = bisect.bisect_right(starts, t) - 1
+        if i < 0:
+            return set()
+        return set(self.slots[i].free)
+
+    def find_slot(
+        self,
+        candidates: set[int],
+        count: int,
+        duration: float,
+        after: float | None = None,
+        *,
+        exact_start: float | None = None,
+        prefer: list[int] | None = None,
+    ) -> tuple[float, set[int]] | None:
+        """Earliest first-fit of ``count`` resources for ``duration``.
+
+        ``exact_start`` pins the start (reservations, §2.3: the user asks for
+        a specific time slot — it either fits there or nowhere).
+        ``prefer`` orders the chosen resources (e.g. pod-contiguity).
+        Returns ``(start, chosen_resource_ids)`` or ``None``.
+        """
+        if count <= 0:
+            return (after if after is not None else self.origin, set())
+        after = self.origin if after is None else max(after, self.origin)
+        if exact_start is not None:
+            avail = self._window_free(exact_start, exact_start + duration, candidates)
+            if len(avail) >= count:
+                return exact_start, self._choose(avail, count, prefer)
+            return None
+        # candidate start times: `after` plus every slot boundary >= after
+        starts = {after}
+        starts.update(s.start for s in self.slots if s.start > after)
+        for t in sorted(starts):
+            avail = self._window_free(t, t + duration, candidates)
+            if len(avail) >= count:
+                return t, self._choose(avail, count, prefer)
+        return None
+
+    def _window_free(self, start: float, stop: float, candidates: set[int]) -> set[int]:
+        """Resources from ``candidates`` free over the whole [start, stop)."""
+        avail = set(candidates)
+        seen_any = False
+        for s in self.slots:
+            if s.stop <= start:
+                continue
+            if s.start >= stop:
+                break
+            seen_any = True
+            avail &= s.free
+            if not avail:
+                break
+        return avail if seen_any else set()
+
+    @staticmethod
+    def _choose(avail: set[int], count: int, prefer: list[int] | None) -> set[int]:
+        if prefer:
+            rank = {r: i for i, r in enumerate(prefer)}
+            ordered = sorted(avail, key=lambda r: (rank.get(r, len(rank)), r))
+        else:
+            ordered = sorted(avail)
+        return set(ordered[:count])

@@ -1,0 +1,93 @@
+"""Job state machine — figure 1 of the paper, enforced.
+
+States and transitions are exactly the paper's: jobs are 'Waiting' at
+submission, may be 'Hold' (on user demand) before scheduling, move to
+'toLaunch' when scheduled, then through the execution sequence
+'Launching' → 'Running' → 'Terminated'. Any abnormal termination (including
+removal of the submission) goes through 'toError' to 'Error'.
+'toAckReservation' is the intermediate state of reservation negotiation.
+"""
+
+from __future__ import annotations
+
+WAITING = "Waiting"
+HOLD = "Hold"
+TO_LAUNCH = "toLaunch"
+TO_ERROR = "toError"
+TO_ACK_RESERVATION = "toAckReservation"
+LAUNCHING = "Launching"
+RUNNING = "Running"
+TERMINATED = "Terminated"
+ERROR = "Error"
+
+ALL_STATES = (
+    WAITING, HOLD, TO_LAUNCH, TO_ERROR, TO_ACK_RESERVATION,
+    LAUNCHING, RUNNING, TERMINATED, ERROR,
+)
+
+# fig. 1 edges. 'toError' is reachable from every live state (any abnormal
+# termination, including removal of the submission).
+TRANSITIONS: dict[str, frozenset[str]] = {
+    WAITING: frozenset({HOLD, TO_LAUNCH, TO_ACK_RESERVATION, TO_ERROR}),
+    HOLD: frozenset({WAITING, TO_ERROR}),
+    TO_ACK_RESERVATION: frozenset({WAITING, TO_ERROR}),
+    TO_LAUNCH: frozenset({LAUNCHING, TO_ERROR}),
+    LAUNCHING: frozenset({RUNNING, TO_ERROR}),
+    RUNNING: frozenset({TERMINATED, TO_ERROR}),
+    TO_ERROR: frozenset({ERROR}),
+    TERMINATED: frozenset(),
+    ERROR: frozenset(),
+}
+
+FINAL_STATES = frozenset({TERMINATED, ERROR})
+LIVE_STATES = frozenset(ALL_STATES) - FINAL_STATES
+
+# reservation substates (fig. 2 'reservation' field): kept while the job is
+# 'Waiting' for the rest of the system, so it can still be held or cancelled.
+RESERVATION_NONE = "None"
+RESERVATION_TO_SCHEDULE = "toSchedule"
+RESERVATION_SCHEDULED = "Scheduled"
+
+
+class IllegalTransition(RuntimeError):
+    pass
+
+
+def check_transition(src: str, dst: str) -> None:
+    if dst not in TRANSITIONS.get(src, frozenset()):
+        raise IllegalTransition(f"illegal job state transition {src!r} -> {dst!r}")
+
+
+def set_state(db, job_id: int, new_state: str, *, message: str | None = None,
+              now: float | None = None) -> None:
+    """Atomically advance a job along fig. 1, stamping times as we pass.
+
+    This is the single write path for job state in the whole system — every
+    module funnels through it, so the DB can never hold an illegal state.
+    """
+    with db.transaction() as cur:
+        row = cur.execute("SELECT state FROM jobs WHERE idJob=?", (job_id,)).fetchone()
+        if row is None:
+            raise KeyError(f"no such job {job_id}")
+        check_transition(row["state"], new_state)
+        sets, params = ["state=?"], [new_state]
+        if message is not None:
+            sets.append("message=?")
+            params.append(message)
+        if now is not None:
+            if new_state == RUNNING:
+                sets.append("startTime=?")
+                params.append(now)
+            elif new_state in (TERMINATED, ERROR, TO_ERROR):
+                sets.append("stopTime=COALESCE(stopTime, ?)")
+                params.append(now)
+        params.append(job_id)
+        cur.execute(f"UPDATE jobs SET {', '.join(sets)} WHERE idJob=?", params)
+    db.notify("jobstate")
+
+
+def get_state(db, job_id: int) -> str:
+    state = db.scalar("SELECT state FROM jobs WHERE idJob=?", (job_id,))
+    if state is None:
+        raise KeyError(f"no such job {job_id}")
+    return state

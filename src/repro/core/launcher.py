@@ -1,0 +1,317 @@
+"""Execution & monitoring layer — the Taktuk adaptation (§2.4).
+
+"Taktuk is highly parallelized and distributed [...] uses a dynamic work
+stealing algorithm to distribute work among working nodes [...] Failure
+detection of nodes is made by testing their responsiveness to attempts for
+connection (reachability) [...] As Taktuk uses an adaptative deployment
+tree, non responsive nodes do not take part in the deployment process."
+
+Adaptation: "nodes" are TPU hosts. The deployment builds a binomial tree
+rooted at the server; each reached host deploys onto a share of the
+remaining host list, and hosts that finish their share *steal* from the
+largest remaining share (dynamic work stealing). A host that does not answer
+within ``connect_timeout`` is marked failed, its subtree share is returned
+to the steal pool (adaptive tree), and deployment continues — failures cost
+one timeout, not a wedge, exactly the paper's flexibility/QoS trade-off
+(fast timeout = reactive but may misjudge slow hosts; long timeout = safe
+but slow).
+
+Transport is pluggable: the default :class:`SimTransport` models per-
+connection latency and injected failures (this container has one real
+machine); a production deployment swaps in an ssh/gRPC transport with the
+same tree logic. The launcher also runs the job-execution and monitoring
+modules: launching `toLaunch` jobs, completing `Running` jobs, and the
+reachability sweep that feeds the resources table.
+"""
+
+from __future__ import annotations
+
+import heapq
+import json
+import time as _time
+from dataclasses import dataclass, field
+from typing import Callable
+
+from repro.core import jobstate
+
+__all__ = ["SimTransport", "TaktukLauncher", "DeploymentReport", "Executor"]
+
+
+# --------------------------------------------------------------------------
+# transport
+# --------------------------------------------------------------------------
+@dataclass
+class SimTransport:
+    """Connection model: latency per hop, plus a failure predicate.
+
+    ``connect(host)`` returns the connection latency, or raises
+    ``TimeoutError`` after ``connect_timeout`` for unreachable hosts —
+    mirroring rsh/ssh client behaviour the paper builds on.
+    """
+    latency: float = 0.010          # per-connection cost (ssh ~10ms on a LAN)
+    connect_timeout: float = 1.0    # the Taktuk-tunable timeout
+    failed_hosts: set[str] = field(default_factory=set)
+    slow_hosts: dict[str, float] = field(default_factory=dict)  # stragglers
+
+    def connect(self, host: str) -> float:
+        if host in self.failed_hosts:
+            raise TimeoutError(f"{host}: no answer after {self.connect_timeout}s")
+        return self.latency + self.slow_hosts.get(host, 0.0)
+
+    def execute(self, host: str, command: str) -> float:
+        """Remote execution cost (the command itself runs asynchronously)."""
+        return self.connect(host)
+
+
+@dataclass
+class DeploymentReport:
+    reached: list[str]
+    failed: list[str]
+    virtual_time: float      # modelled makespan of the deployment tree
+    connections: int
+    steals: int
+
+
+# --------------------------------------------------------------------------
+# tree deployment with work stealing
+# --------------------------------------------------------------------------
+class TaktukLauncher:
+    """Binomial-tree parallel remote execution with work stealing."""
+
+    def __init__(self, transport: SimTransport | None = None, fanout: int = 2):
+        self.transport = transport or SimTransport()
+        self.fanout = fanout
+
+    def deploy(self, hosts: list[str], command: str = "") -> DeploymentReport:
+        """Reach every host; returns who answered and the modelled makespan.
+
+        Simulation of the distributed algorithm: a worker = a reached host
+        (or the root). Each worker owns a slice of the remaining host list;
+        after each successful connection it spawns the child as a new worker
+        and hands it half of its remaining slice (binomial tree). A worker
+        whose slice empties steals half of the largest remaining slice
+        (dynamic work stealing — §2.4 load-balance under latency variation).
+        Failed connections burn ``connect_timeout`` and the target is
+        excluded from the tree (adaptive deployment).
+        """
+        tr = self.transport
+        reached: list[str] = []
+        failed: list[str] = []
+        steals = 0
+        connections = 0
+        # event-driven: heap of (time_free, worker_id); worker slices by id
+        slices: dict[int, list[str]] = {0: list(hosts)}
+        heap: list[tuple[float, int]] = [(0.0, 0)]
+        next_worker = 1
+        makespan = 0.0
+        while heap:
+            t, w = heapq.heappop(heap)
+            sl = slices.get(w, [])
+            if not sl:
+                # steal half of the largest slice
+                donor = max(slices, key=lambda k: len(slices[k]), default=None)
+                if donor is None or not slices.get(donor):
+                    continue
+                take = slices[donor][len(slices[donor]) // 2:]
+                if not take:
+                    continue
+                del slices[donor][len(slices[donor]) // 2:]
+                sl = slices[w] = take
+                steals += 1
+            host = sl.pop(0)
+            connections += 1
+            try:
+                dt = tr.execute(host, command)
+            except TimeoutError:
+                failed.append(host)
+                t2 = t + tr.connect_timeout
+                makespan = max(makespan, t2)
+                heapq.heappush(heap, (t2, w))  # keep working after the timeout
+                continue
+            reached.append(host)
+            t2 = t + dt
+            makespan = max(makespan, t2)
+            # child becomes a worker with half of our remaining slice
+            child = next_worker
+            next_worker += 1
+            half = sl[len(sl) // 2:]
+            del sl[len(sl) // 2:]
+            slices[child] = half
+            heapq.heappush(heap, (t2, child))
+            if sl or any(slices.values()):
+                heapq.heappush(heap, (t2, w))
+        return DeploymentReport(reached, failed, makespan, connections, steals)
+
+    def check_hosts(self, hosts: list[str]) -> DeploymentReport:
+        """Reachability sweep (the 'check nodes state' of fig. 10)."""
+        return self.deploy(hosts, command=":")
+
+
+# --------------------------------------------------------------------------
+# execution module (launch / complete / monitor) — DB-driven
+# --------------------------------------------------------------------------
+class Executor:
+    """Turns `toLaunch` rows into running work and reaps completions.
+
+    The *only* inputs/outputs are DB tables — §2: the DB is the sole
+    communication medium. Actual job payloads are JSON specs in the
+    ``command`` column; a registry maps spec kinds to Python callables
+    (training/serving drivers plug in here). In simulation the payload's
+    duration is virtual and completion is driven by the simulator clock.
+    """
+
+    def __init__(self, db, *, clock=None, launcher: TaktukLauncher | None = None,
+                 check_nodes: bool = True,
+                 runner: Callable[[dict, list[str]], None] | None = None):
+        self.db = db
+        self.clock = clock or _time.time
+        self.launcher = launcher or TaktukLauncher()
+        self.check_nodes = check_nodes
+        self.runner = runner  # optional real payload runner (data plane)
+
+    # ------------------------------------------------------------- launching
+    def launch_pending(self) -> list[int]:
+        launched = []
+        for job in self.db.query("SELECT * FROM jobs WHERE state='toLaunch' ORDER BY idJob"):
+            jid = job["idJob"]
+            hosts = [r["hostname"] for r in self.db.query(
+                "SELECT r.hostname FROM assignments a JOIN resources r "
+                "ON r.idResource=a.idResource WHERE a.idJob=? ORDER BY r.idResource",
+                (jid,))]
+            jobstate.set_state(self.db, jid, jobstate.LAUNCHING)
+            if self.check_nodes:
+                rep = self.launcher.check_hosts(hosts)
+                if rep.failed:
+                    self._mark_dead(rep.failed)
+                    jobstate.set_state(self.db, jid, jobstate.TO_ERROR,
+                                       message=f"nodes failed at launch: {rep.failed}",
+                                       now=self.clock())
+                    jobstate.set_state(self.db, jid, jobstate.ERROR, now=self.clock())
+                    self.db.notify("scheduler")  # free resources → reschedule
+                    continue
+            rep = self.launcher.deploy(hosts, job["command"])
+            if rep.failed:
+                self._mark_dead(rep.failed)
+                jobstate.set_state(self.db, jid, jobstate.TO_ERROR,
+                                   message=f"deployment failed: {rep.failed}",
+                                   now=self.clock())
+                jobstate.set_state(self.db, jid, jobstate.ERROR, now=self.clock())
+                self.db.notify("scheduler")
+                continue
+            now = self.clock()
+            with self.db.transaction() as cur:
+                cur.execute("UPDATE jobs SET bpid=? WHERE idJob=?",
+                            (f"sim-{jid}", jid))
+            jobstate.set_state(self.db, jid, jobstate.RUNNING, now=now)
+            if self.runner is not None:
+                spec = self._spec(job)
+                self.runner(spec, hosts)
+            launched.append(jid)
+        return launched
+
+    @staticmethod
+    def _spec(job) -> dict:
+        try:
+            spec = json.loads(job["command"])
+            if not isinstance(spec, dict):
+                raise ValueError
+        except (ValueError, TypeError):
+            spec = {"kind": "shell", "command": job["command"]}
+        spec.setdefault("idJob", job["idJob"])
+        return spec
+
+    # ------------------------------------------------------------ completion
+    def complete(self, job_id: int, *, ok: bool = True, message: str = "") -> None:
+        now = self.clock()
+        if ok:
+            jobstate.set_state(self.db, job_id, jobstate.TERMINATED,
+                               message=message or "completed", now=now)
+        else:
+            jobstate.set_state(self.db, job_id, jobstate.TO_ERROR,
+                               message=message or "failed", now=now)
+            jobstate.set_state(self.db, job_id, jobstate.ERROR, now=now)
+        with self.db.transaction() as cur:
+            cur.execute("DELETE FROM assignments WHERE idJob=?", (job_id,))
+            cur.execute("DELETE FROM gantt WHERE idJob=?", (job_id,))
+        self.db.notify("scheduler")
+
+    def reap_walltime_exceeded(self) -> list[int]:
+        """Monitoring duty: kill jobs past their maxTime (uses bpid to kill)."""
+        now = self.clock()
+        killed = []
+        # strictly late: a job completing exactly at its walltime is a
+        # success, not an overrun (ESP jobs run exactly their estimate)
+        for job in self.db.query(
+                "SELECT idJob FROM jobs WHERE state='Running' "
+                "AND startTime + maxTime < ?", (now - 1e-6,)):
+            self.complete(job["idJob"], ok=False, message="walltime exceeded")
+            killed.append(job["idJob"])
+        return killed
+
+    # ---------------------------------------------------------- cancellation
+    def run_cancellation(self) -> list[int]:
+        """The generic cancellation module (§3.3): acts on `toCancel` flags
+        set by the scheduler (preemption) or by `oardel` (user removal)."""
+        cancelled = []
+        for job in self.db.query("SELECT idJob, state FROM jobs WHERE toCancel=1"):
+            jid, state = job["idJob"], job["state"]
+            now = self.clock()
+            if state in (jobstate.TERMINATED, jobstate.ERROR):
+                pass
+            elif state in (jobstate.WAITING, jobstate.HOLD, jobstate.TO_LAUNCH,
+                           jobstate.LAUNCHING, jobstate.RUNNING,
+                           jobstate.TO_ACK_RESERVATION):
+                # keep the scheduler's 'preempted: …' message if present —
+                # the resubmission module keys on it (§3.3)
+                msg = self.db.scalar("SELECT message FROM jobs WHERE idJob=?", (jid,))
+                keep = isinstance(msg, str) and msg.startswith("preempted:")
+                jobstate.set_state(self.db, jid, jobstate.TO_ERROR,
+                                   message=None if keep else "cancelled", now=now)
+                jobstate.set_state(self.db, jid, jobstate.ERROR, now=now)
+                with self.db.transaction() as cur:
+                    cur.execute("DELETE FROM assignments WHERE idJob=?", (jid,))
+                    cur.execute("DELETE FROM gantt WHERE idJob=?", (jid,))
+                cancelled.append(jid)
+            with self.db.transaction() as cur:
+                cur.execute("UPDATE jobs SET toCancel=0 WHERE idJob=?", (jid,))
+        if cancelled:
+            self.db.notify("scheduler")
+        return cancelled
+
+    # ------------------------------------------------------------ monitoring
+    def monitor_nodes(self) -> DeploymentReport:
+        """Periodic reachability sweep over the whole cluster."""
+        hosts = [r["hostname"] for r in
+                 self.db.query("SELECT hostname FROM resources WHERE state!='Absent'")]
+        rep = self.launcher.check_hosts(hosts)
+        self._mark_dead(rep.failed)
+        # resurrection: hosts answering again come back Alive (elasticity)
+        if rep.reached:
+            qmarks = ",".join("?" * len(rep.reached))
+            with self.db.transaction() as cur:
+                cur.execute(
+                    f"UPDATE resources SET state='Alive' WHERE hostname IN ({qmarks}) "
+                    "AND state='Suspected'", rep.reached)
+        return rep
+
+    def _mark_dead(self, hostnames: list[str]) -> None:
+        if not hostnames:
+            return
+        qmarks = ",".join("?" * len(hostnames))
+        with self.db.transaction() as cur:
+            cur.execute(f"UPDATE resources SET state='Suspected' "
+                        f"WHERE hostname IN ({qmarks})", hostnames)
+        self.db.log_event("monitor", "warn",
+                          f"nodes suspected (timeout): {','.join(hostnames)}")
+        # jobs running on dead nodes fail → rescheduled by resubmission policy
+        rows = self.db.query(
+            f"SELECT DISTINCT a.idJob FROM assignments a "
+            f"JOIN resources r ON r.idResource=a.idResource "
+            f"JOIN jobs j ON j.idJob=a.idJob "
+            f"WHERE r.hostname IN ({qmarks}) AND j.state IN "
+            f"('toLaunch','Launching','Running')", hostnames)
+        for row in rows:
+            self.db.log_event("monitor", "warn", "job lost to node failure",
+                              row["idJob"])
+            self.complete(row["idJob"], ok=False, message="node failure")
+        self.db.notify("scheduler")

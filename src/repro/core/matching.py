@@ -1,0 +1,56 @@
+"""Resource matching — §2.3.
+
+"resources required by jobs are matched with available ones as a user might
+need nodes with special properties (like single switch interconnection, or a
+mandatory quantity of RAM)". The job's ``properties`` column is an SQL
+boolean expression evaluated directly against the ``resources`` table —
+"the rich expressive power of sql queries" is the matching engine, which is
+the whole point of putting a relational DB at the centre.
+"""
+
+from __future__ import annotations
+
+import re
+
+__all__ = ["match_resources", "validate_properties", "BadProperties"]
+
+
+class BadProperties(ValueError):
+    pass
+
+
+# The expression runs inside a SELECT we build; keep it a single expression.
+_FORBIDDEN = re.compile(r";|--|/\*|\bATTACH\b|\bPRAGMA\b|\bINSERT\b|\bUPDATE\b|"
+                        r"\bDELETE\b|\bDROP\b|\bALTER\b|\bCREATE\b", re.IGNORECASE)
+
+
+def validate_properties(expr: str) -> str:
+    expr = (expr or "").strip()
+    if expr and _FORBIDDEN.search(expr):
+        raise BadProperties(f"illegal token in properties expression: {expr!r}")
+    return expr
+
+
+def match_resources(db, properties: str, *, min_weight: int = 1,
+                    alive_only: bool = True, besteffort: bool = False) -> list[int]:
+    """Resource ids matching a job's requirements, ordered for locality.
+
+    Ordering by (pod, switch, id) makes first-fit placements contiguous on
+    the interconnect — the TPU adaptation of the paper's "single switch
+    interconnection" property.
+    """
+    expr = validate_properties(properties)
+    sql = "SELECT idResource FROM resources WHERE weight >= ?"
+    params: list = [min_weight]
+    if alive_only:
+        sql += " AND state='Alive'"
+    if besteffort:
+        sql += " AND besteffort_ok=1"
+    if expr:
+        sql += f" AND ({expr})"
+    sql += " ORDER BY pod, switch, idResource"
+    try:
+        rows = db.query(sql, params)
+    except Exception as exc:
+        raise BadProperties(f"properties expression failed: {expr!r}: {exc}") from exc
+    return [r["idResource"] for r in rows]

@@ -1,0 +1,254 @@
+"""The meta-scheduler — §2.3.
+
+"The scheduling of all the jobs in the system is computed by a module we
+called 'meta-scheduler' which manages reservations and schedule each queue
+using its own scheduler. This module maintains an internal representation of
+the available ressources similar to a Gantt diagram [...] The whole
+algorithm schedules each queue in turn by decreasing priority using it
+associated scheduler. At the end of the process, the state of the job that
+should be executed is changed to 'toLaunch'."
+
+Everything here reads from and writes to the DB only; the in-memory Gantt is
+rebuilt on every pass (stateless between passes — a crash loses nothing, the
+paper's recovery argument).
+"""
+
+from __future__ import annotations
+
+import json
+import time as _time
+
+from repro.core import jobstate
+from repro.core.gantt import Gantt
+from repro.core.matching import BadProperties, match_resources
+from repro.core.policies import JobView, Placement, get_policy
+
+__all__ = ["MetaScheduler"]
+
+EPS = 1e-9
+
+
+class MetaScheduler:
+    def __init__(self, db, *, clock=None, besteffort_victim_policy: str = "youngest_first"):
+        self.db = db
+        self.clock = clock or _time.time
+        # §3.3: "choice policies for the job to cancel (for instance by
+        # startup date order [...] or by the number of used nodes)"
+        self.besteffort_victim_policy = besteffort_victim_policy
+
+    # ------------------------------------------------------------ main pass
+    def run(self) -> dict:
+        """One full scheduling pass. Returns a summary for logging/tests."""
+        now = self.clock()
+        summary = {"now": now, "launched": [], "reservations": [], "preempted": []}
+
+        gantt = self._build_gantt(now)
+        self._schedule_reservations(gantt, now, summary)
+        placements = self._schedule_queues(gantt, now, summary)
+        self._launch_due(placements, now, summary)
+        self._preempt_besteffort(placements, now, summary)
+        self.db.log_event("metascheduler", "info",
+                          f"pass at {now:.3f}: launched={len(summary['launched'])}")
+        return summary
+
+    # ----------------------------------------------------------- gantt init
+    def _alive_resources(self) -> set[int]:
+        return {r["idResource"] for r in
+                self.db.query("SELECT idResource FROM resources WHERE state='Alive'")}
+
+    def _build_gantt(self, now: float) -> Gantt:
+        gantt = Gantt(self._alive_resources(), now)
+        # occupied: executing jobs (until predicted end)...
+        rows = self.db.query(
+            "SELECT j.idJob, j.maxTime, j.startTime, a.idResource FROM jobs j "
+            "JOIN assignments a ON a.idJob = j.idJob "
+            "WHERE j.state IN ('toLaunch','Launching','Running')")
+        by_job: dict[int, dict] = {}
+        for r in rows:
+            d = by_job.setdefault(r["idJob"], {"rids": set(), "maxTime": r["maxTime"],
+                                               "startTime": r["startTime"]})
+            d["rids"].add(r["idResource"])
+        for jid, d in by_job.items():
+            start = d["startTime"] if d["startTime"] is not None else now
+            gantt.occupy(d["rids"], now, max(now, start + d["maxTime"]))
+        # ...and accepted reservations (persisted in the gantt table)
+        for r in self.db.query(
+                "SELECT g.idResource, g.startTime, g.stopTime FROM gantt g "
+                "JOIN jobs j ON j.idJob = g.idJob WHERE j.state='Waiting' "
+                "AND j.reservation='Scheduled'"):
+            gantt.occupy({r["idResource"]}, r["startTime"], r["stopTime"])
+        return gantt
+
+    # -------------------------------------------------------- reservations
+    def _schedule_reservations(self, gantt: Gantt, now: float, summary: dict) -> None:
+        """Negotiate 'toSchedule' reservations (fig. 1 toAckReservation path).
+
+        "as long as the job meet the admission rules and the ressources are
+        available during the requested time slot, the schedule date of the
+        job is definitively set."
+        """
+        rows = self.db.query(
+            "SELECT * FROM jobs WHERE state='Waiting' AND reservation='toSchedule' "
+            "ORDER BY idJob")
+        for job in rows:
+            start_req = job["reservationStart"]
+            try:
+                cands = set(match_resources(self.db, job["properties"],
+                                            min_weight=job["weight"]))
+            except BadProperties as exc:
+                self._to_error(job["idJob"], str(exc), now)
+                continue
+            fit = gantt.find_slot(cands, job["nbNodes"], job["maxTime"],
+                                  exact_start=max(start_req, now))
+            if fit is None:
+                self._to_error(job["idJob"],
+                               "reservation slot unavailable", now)
+                continue
+            start, rids = fit
+            gantt.occupy(rids, start, start + job["maxTime"])
+            # negotiation: Waiting -> toAckReservation -> (ack) -> Waiting,
+            # with reservation substate moved to 'Scheduled' and the slot
+            # persisted in the gantt table.
+            jobstate.set_state(self.db, job["idJob"], jobstate.TO_ACK_RESERVATION)
+            with self.db.transaction() as cur:
+                for rid in rids:
+                    cur.execute(
+                        "INSERT INTO gantt(idJob, idResource, startTime, stopTime) "
+                        "VALUES (?,?,?,?)",
+                        (job["idJob"], rid, start, start + job["maxTime"]))
+                cur.execute(
+                    "UPDATE jobs SET reservation='Scheduled', reservationStart=?, "
+                    "message=? WHERE idJob=?",
+                    (start, f"reservation granted at {start:.3f}", job["idJob"]))
+            jobstate.set_state(self.db, job["idJob"], jobstate.WAITING)
+            summary["reservations"].append((job["idJob"], start))
+        # fire reservations whose time has come
+        for job in self.db.query(
+                "SELECT idJob, reservationStart FROM jobs WHERE state='Waiting' "
+                "AND reservation='Scheduled' AND reservationStart <= ?", (now + EPS,)):
+            rids = {r["idResource"] for r in self.db.query(
+                "SELECT idResource FROM gantt WHERE idJob=?", (job["idJob"],))}
+            alive = self._alive_resources()
+            if not rids <= alive:
+                self._to_error(job["idJob"], "reserved resources lost", now)
+                continue
+            self._assign_and_mark(job["idJob"], rids)
+            summary["launched"].append(job["idJob"])
+
+    # -------------------------------------------------------------- queues
+    def _queue_jobs(self, queue: str) -> list[JobView]:
+        views = []
+        for job in self.db.query(
+                "SELECT * FROM jobs WHERE state='Waiting' AND reservation='None' "
+                "AND queueName=? ORDER BY idJob", (queue,)):
+            try:
+                cands = match_resources(self.db, job["properties"],
+                                        min_weight=job["weight"])
+            except BadProperties as exc:
+                self._to_error(job["idJob"], str(exc), self.clock())
+                continue
+            views.append(JobView(
+                idJob=job["idJob"], nbNodes=job["nbNodes"], weight=job["weight"],
+                maxTime=job["maxTime"], submissionTime=job["submissionTime"],
+                candidates=set(cands), prefer=list(cands),
+                bestEffort=bool(job["bestEffort"])))
+        return views
+
+    def _schedule_queues(self, gantt: Gantt, now: float, summary: dict) -> list[Placement]:
+        placements: list[Placement] = []
+        queues = self.db.query(
+            "SELECT queueName, policy FROM queues WHERE state='Active' "
+            "ORDER BY priority DESC, queueName")
+        for q in queues:
+            jobs = self._queue_jobs(q["queueName"])
+            if not jobs:
+                continue
+            policy = get_policy(q["policy"])
+            placements.extend(policy(gantt, jobs, now))
+        return placements
+
+    def _launch_due(self, placements: list[Placement], now: float, summary: dict) -> None:
+        for p in placements:
+            if p.starts_now(now):
+                self._assign_and_mark(p.idJob, p.resources)
+                summary["launched"].append(p.idJob)
+
+    # --------------------------------------------------------- best effort
+    def _preempt_besteffort(self, placements: list[Placement], now: float,
+                            summary: dict) -> None:
+        """§3.3 two-step cancellation: the scheduler sets flags on best-effort
+        jobs whose resources are needed; the generic cancellation module acts
+        on the flags; the waiting job is scheduled "when coming back to the
+        scheduler" (i.e. on a later pass, once resources are actually free).
+        """
+        placed = {p.idJob for p in placements}
+        blocked = self.db.query(
+            "SELECT * FROM jobs WHERE state='Waiting' AND reservation='None' "
+            "AND bestEffort=0 ORDER BY idJob")
+        blocked = [j for j in blocked if j["idJob"] not in placed or not any(
+            p.idJob == j["idJob"] and p.starts_now(now) for p in placements)]
+        if not blocked:
+            return
+        running_be = self.db.query(
+            "SELECT j.idJob, j.startTime, j.nbNodes, COUNT(a.idResource) AS nres "
+            "FROM jobs j JOIN assignments a ON a.idJob=j.idJob "
+            "WHERE j.state IN ('toLaunch','Launching','Running') AND j.bestEffort=1 "
+            "AND j.toCancel=0 GROUP BY j.idJob")
+        if not running_be:
+            return
+        if self.besteffort_victim_policy == "youngest_first":
+            # cancel the youngest first "in an attempt to let the oldest progress"
+            victims = sorted(running_be, key=lambda r: -(r["startTime"] or 0))
+        else:  # fewest_nodes: minimise the number of cancelled jobs
+            victims = sorted(running_be, key=lambda r: -r["nres"])
+        for j in blocked:
+            need = j["nbNodes"]
+            try:
+                cands = set(match_resources(self.db, j["properties"],
+                                            min_weight=j["weight"]))
+            except BadProperties:
+                continue
+            free_now = self._free_now(now)
+            deficit = need - len(free_now & cands)
+            if deficit <= 0:
+                continue  # will launch on the next pass anyway
+            reclaimable = 0
+            chosen = []
+            for v in victims:
+                if reclaimable >= deficit:
+                    break
+                v_rids = {r["idResource"] for r in self.db.query(
+                    "SELECT idResource FROM assignments WHERE idJob=?", (v["idJob"],))}
+                gain = len(v_rids & cands)
+                if gain > 0:
+                    chosen.append(v["idJob"])
+                    reclaimable += gain
+            if reclaimable >= deficit:
+                with self.db.transaction() as cur:
+                    for vid in chosen:
+                        cur.execute("UPDATE jobs SET toCancel=1, message=? WHERE idJob=?",
+                                    ("preempted: resources required by job "
+                                     f"{j['idJob']}", vid))
+                summary["preempted"].extend(chosen)
+                victims = [v for v in victims if v["idJob"] not in chosen]
+                self.db.notify("cancel")
+
+    # -------------------------------------------------------------- helpers
+    def _free_now(self, now: float) -> set[int]:
+        busy = {r["idResource"] for r in self.db.query(
+            "SELECT a.idResource FROM assignments a JOIN jobs j ON j.idJob=a.idJob "
+            "WHERE j.state IN ('toLaunch','Launching','Running')")}
+        return self._alive_resources() - busy
+
+    def _assign_and_mark(self, job_id: int, rids: set[int]) -> None:
+        with self.db.transaction() as cur:
+            cur.execute("DELETE FROM assignments WHERE idJob=?", (job_id,))
+            for rid in rids:
+                cur.execute("INSERT INTO assignments(idJob, idResource) VALUES (?,?)",
+                            (job_id, rid))
+        jobstate.set_state(self.db, job_id, jobstate.TO_LAUNCH)
+
+    def _to_error(self, job_id: int, message: str, now: float) -> None:
+        jobstate.set_state(self.db, job_id, jobstate.TO_ERROR, message=message, now=now)
+        jobstate.set_state(self.db, job_id, jobstate.ERROR, now=now)
+        self.db.log_event("metascheduler", "error", message, job_id)

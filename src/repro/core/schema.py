@@ -1,0 +1,157 @@
+"""DDL for the OAR state store.
+
+The ``jobs`` table follows the paper's figure 2 field-for-field (idJob,
+jobType, infoType, state, reservation, message, user, nbNodes, weight,
+command, bpid, queueName, maxTime, properties, launchingDirectory,
+submissionTime, startTime, stopTime) with the additions the paper describes
+in prose: the best-effort property (§3.3) and cancellation-request flags.
+
+The other tables are the ones fig. 2's caption defers ("a table for
+describing nodes, a table for describing the assignment of nodes to jobs,
+and so on"): resources, assignments, queues, admission rules (stored *as
+code in the database*, §2.1), gantt reservations and the event log.
+"""
+
+from __future__ import annotations
+
+JOBS = """
+CREATE TABLE IF NOT EXISTS jobs (
+    idJob               INTEGER PRIMARY KEY AUTOINCREMENT,
+    jobType             TEXT NOT NULL DEFAULT 'PASSIVE',  -- INTERACTIVE | PASSIVE
+    infoType            TEXT DEFAULT '',                  -- contact for interactive jobs
+    state               TEXT NOT NULL DEFAULT 'Waiting',
+    reservation         TEXT NOT NULL DEFAULT 'None',     -- None | toSchedule | Scheduled
+    message             TEXT DEFAULT '',
+    user                TEXT NOT NULL DEFAULT '',
+    nbNodes             INTEGER NOT NULL DEFAULT 1,
+    weight              INTEGER NOT NULL DEFAULT 1,       -- procs (chips) per node
+    command             TEXT NOT NULL DEFAULT '',         -- JSON job spec or shell cmd
+    bpid                TEXT DEFAULT '',                  -- handle used to kill the job
+    queueName           TEXT NOT NULL DEFAULT 'default',
+    maxTime             REAL NOT NULL DEFAULT 3600.0,     -- walltime limit (s)
+    properties          TEXT NOT NULL DEFAULT '',         -- SQL expr over resources
+    launchingDirectory  TEXT DEFAULT '',
+    submissionTime      REAL NOT NULL DEFAULT 0,
+    startTime           REAL,
+    stopTime            REAL,
+    -- prose additions --
+    bestEffort          INTEGER NOT NULL DEFAULT 0,       -- §3.3 global computing
+    toCancel            INTEGER NOT NULL DEFAULT 0,       -- scheduler-set kill flag
+    reservationStart    REAL,                             -- requested slot (reservations)
+    checkpointPath      TEXT DEFAULT ''                   -- data-plane resume handle
+)
+"""
+
+RESOURCES = """
+CREATE TABLE IF NOT EXISTS resources (
+    idResource   INTEGER PRIMARY KEY AUTOINCREMENT,
+    hostname     TEXT NOT NULL UNIQUE,
+    state        TEXT NOT NULL DEFAULT 'Alive',  -- Alive | Suspected | Dead | Absent
+    weight       INTEGER NOT NULL DEFAULT 1,     -- chips on this host
+    -- matchable properties (the 'properties' SQL expr in jobs targets these)
+    pod          INTEGER NOT NULL DEFAULT 0,
+    switch       TEXT NOT NULL DEFAULT 'sw0',
+    mem_gb       INTEGER NOT NULL DEFAULT 16,
+    chip         TEXT NOT NULL DEFAULT 'tpu-v5e',
+    besteffort_ok INTEGER NOT NULL DEFAULT 1
+)
+"""
+
+ASSIGNMENTS = """
+CREATE TABLE IF NOT EXISTS assignments (
+    idJob      INTEGER NOT NULL REFERENCES jobs(idJob),
+    idResource INTEGER NOT NULL REFERENCES resources(idResource),
+    PRIMARY KEY (idJob, idResource)
+)
+"""
+
+QUEUES = """
+CREATE TABLE IF NOT EXISTS queues (
+    queueName  TEXT PRIMARY KEY,
+    priority   INTEGER NOT NULL DEFAULT 0,     -- higher scheduled first
+    policy     TEXT NOT NULL DEFAULT 'fifo_backfill',
+    state      TEXT NOT NULL DEFAULT 'Active'  -- Active | Stopped  (§2.3: a whole
+)                                              -- queue can be interrupted)
+"""
+
+ADMISSION_RULES = """
+CREATE TABLE IF NOT EXISTS admission_rules (
+    idRule   INTEGER PRIMARY KEY AUTOINCREMENT,
+    priority INTEGER NOT NULL DEFAULT 0,
+    rule     TEXT NOT NULL            -- code, executed at submission (§2.1)
+)
+"""
+
+GANTT = """
+CREATE TABLE IF NOT EXISTS gantt (
+    idJob      INTEGER NOT NULL REFERENCES jobs(idJob),
+    idResource INTEGER NOT NULL REFERENCES resources(idResource),
+    startTime  REAL NOT NULL,
+    stopTime   REAL NOT NULL
+)
+"""
+
+EVENT_LOG = """
+CREATE TABLE IF NOT EXISTS event_log (
+    idEvent INTEGER PRIMARY KEY AUTOINCREMENT,
+    ts      REAL NOT NULL,
+    module  TEXT NOT NULL,
+    level   TEXT NOT NULL,
+    job_id  INTEGER,
+    message TEXT NOT NULL
+)
+"""
+
+ALL_TABLES = [JOBS, RESOURCES, ASSIGNMENTS, QUEUES, ADMISSION_RULES, GANTT, EVENT_LOG]
+
+ALL_INDEXES = [
+    "CREATE INDEX IF NOT EXISTS idx_jobs_state ON jobs(state)",
+    "CREATE INDEX IF NOT EXISTS idx_jobs_queue ON jobs(queueName, state)",
+    "CREATE INDEX IF NOT EXISTS idx_assign_job ON assignments(idJob)",
+    "CREATE INDEX IF NOT EXISTS idx_gantt_job ON gantt(idJob)",
+    "CREATE INDEX IF NOT EXISTS idx_events_job ON event_log(job_id)",
+]
+
+# Default admission rules, stored in the DB as code exactly as the paper
+# stores Perl in MySQL (§2.1: "rules are stored as Perl code in the
+# database"). They run in a namespace exposing `job` (dict, mutable) and
+# `ctx` (db stats); raising AdmissionError rejects the submission.
+DEFAULT_ADMISSION_RULES = [
+    # set missing parameters
+    (0, "job.setdefault('queueName', 'default')"),
+    (1, "job.setdefault('maxTime', 3600.0)"),
+    (2, "job.setdefault('nbNodes', 1)\njob.setdefault('weight', 1)"),
+    # "ensure that no user ask for too much resources at once" (§2.1)
+    (10, (
+        "if job['nbNodes'] * job['weight'] > ctx['total_procs']:\n"
+        "    raise AdmissionError('job asks for %d procs, cluster has %d'\n"
+        "        % (job['nbNodes'] * job['weight'], ctx['total_procs']))"
+    )),
+    # §3.3: submitting to the besteffort queue tags the job preemptible —
+    # "this property is set by the module that validates incoming jobs"
+    (20, "if job['queueName'] == 'besteffort':\n    job['bestEffort'] = 1"),
+    # reservations enter negotiation (fig. 1 'toAckReservation' path)
+    (30, "if job.get('reservationStart') is not None:\n    job['reservation'] = 'toSchedule'"),
+]
+
+DEFAULT_QUEUES = [
+    # (name, priority, policy): interactive above default above besteffort —
+    # §2.3 "different scheduling optimizations for different queues (response
+    # time for interactive jobs, throughput for large and slow computations)"
+    ("interactive", 100, "fifo_backfill"),
+    ("default", 50, "fifo_backfill"),
+    ("besteffort", 0, "fifo_backfill"),
+]
+
+
+def install_defaults(db) -> None:
+    with db.transaction() as cur:
+        for prio, rule in DEFAULT_ADMISSION_RULES:
+            cur.execute(
+                "INSERT INTO admission_rules(priority, rule) VALUES (?,?)", (prio, rule)
+            )
+        for name, prio, policy in DEFAULT_QUEUES:
+            cur.execute(
+                "INSERT OR IGNORE INTO queues(queueName, priority, policy) VALUES (?,?,?)",
+                (name, prio, policy),
+            )

@@ -1,0 +1,250 @@
+"""Discrete-event cluster simulator.
+
+Drives the *real* OAR modules (real SQL, real meta-scheduler, real launcher
+tree, real state machine) under a virtual clock, so scheduling experiments —
+the paper's stated purpose for OAR as "a research platform suited for
+scheduling experiments" — run at thousands-of-nodes scale on one machine.
+Only two things are virtual: the passage of time and the job payloads
+(each job carries an ``actual duration``; completion is an event).
+
+Used by benchmarks/esp2.py (figs. 4-8, table 3), benchmarks/scale.py and the
+fault-tolerance tests (node-failure injection mid-run).
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import json
+from dataclasses import dataclass, field
+from typing import Any
+
+from repro.core import api, jobstate
+from repro.core.central import CentralModule
+from repro.core.db import connect
+from repro.core.launcher import Executor, SimTransport, TaktukLauncher
+from repro.core.metascheduler import MetaScheduler
+
+__all__ = ["ClusterSimulator", "JobRecord"]
+
+EPS = 1e-9
+
+
+@dataclass(order=True)
+class _Event:
+    time: float
+    seq: int
+    kind: str = field(compare=False)
+    payload: Any = field(compare=False, default=None)
+
+
+@dataclass
+class JobRecord:
+    idJob: int
+    submit: float
+    duration: float
+    procs: int
+    start: float | None = None
+    stop: float | None = None
+    state: str = ""
+    resources: frozenset = frozenset()   # captured while Running (assignments
+                                         # are cleared on termination)
+
+    @property
+    def response(self) -> float | None:
+        return None if self.stop is None else self.stop - self.submit
+
+    @property
+    def wait(self) -> float | None:
+        return None if self.start is None else self.start - self.submit
+
+
+class ClusterSimulator:
+    def __init__(self, *, n_nodes: int = 17, weight: int = 2, pods: int = 1,
+                 policy: str = "fifo_backfill", db_path: str = ":memory:",
+                 check_nodes: bool = False, transport: SimTransport | None = None,
+                 victim_policy: str = "youngest_first",
+                 scheduler_period: float = 30.0):
+        self.now = 0.0
+        self._seq = itertools.count()
+        self._heap: list[_Event] = []
+        self.db = connect(db_path, fresh=(db_path != ":memory:"))
+        self.db.clock = lambda: self.now   # event_log in virtual time
+        per_pod = n_nodes // pods if pods > 1 else n_nodes
+        for p in range(pods):
+            count = per_pod if p < pods - 1 else n_nodes - per_pod * (pods - 1)
+            api.add_resources(
+                self.db, [f"pod{p}-host{i}" for i in range(count)],
+                weight=weight, pod=p, switch=f"sw{p}")
+        with self.db.transaction() as cur:
+            cur.execute("UPDATE queues SET policy=?", (policy,))
+        clock = lambda: self.now  # noqa: E731
+        self.transport = transport or SimTransport()
+        scheduler = MetaScheduler(self.db, clock=clock,
+                                  besteffort_victim_policy=victim_policy)
+        executor = Executor(self.db, clock=clock,
+                            launcher=TaktukLauncher(self.transport),
+                            check_nodes=check_nodes)
+        self.central = CentralModule(
+            self.db, clock=clock, scheduler=scheduler, executor=executor,
+            periods={"scheduler": scheduler_period})
+        self.records: dict[int, JobRecord] = {}
+        self._completion_scheduled: set[int] = set()
+        self.trace: list[tuple[float, int]] = []  # (t, procs_in_use) for figs 4-8
+
+    # ---------------------------------------------------------------- events
+    def _push(self, t: float, kind: str, payload: Any = None) -> None:
+        heapq.heappush(self._heap, _Event(t, next(self._seq), kind, payload))
+
+    def submit(self, at: float, *, duration: float, nb_nodes: int = 1,
+               weight: int = 1, max_time: float | None = None,
+               queue: str | None = None, user: str = "sim",
+               properties: str = "", reservation_start: float | None = None,
+               best_effort: bool | None = None, tag: str = "") -> None:
+        self._push(at, "submit", {
+            "duration": duration, "nb_nodes": nb_nodes, "weight": weight,
+            "max_time": max_time if max_time is not None else duration * 1.25 + 1.0,
+            "queue": queue, "user": user, "properties": properties,
+            "reservation_start": reservation_start, "best_effort": best_effort,
+            "tag": tag})
+
+    def fail_node(self, at: float, hostname: str) -> None:
+        self._push(at, "fail", hostname)
+
+    def revive_node(self, at: float, hostname: str) -> None:
+        self._push(at, "revive", hostname)
+
+    def add_nodes(self, at: float, hostnames: list[str], **kw) -> None:
+        self._push(at, "grow", (hostnames, kw))
+
+    # ------------------------------------------------------------------ run
+    def run(self, until: float | None = None) -> list[JobRecord]:
+        self._drain()
+        while self._heap:
+            ev = heapq.heappop(self._heap)
+            if until is not None and ev.time > until:
+                self.now = until
+                break
+            self.now = max(self.now, ev.time)
+            getattr(self, f"_on_{ev.kind}")(ev.payload)
+            # Coalesce same-instant events before letting modules react —
+            # the central module "discards the redundant notifications"
+            # (§2.2), so a burst arriving together is scheduled together.
+            while self._heap and abs(self._heap[0].time - ev.time) < EPS:
+                ev2 = heapq.heappop(self._heap)
+                getattr(self, f"_on_{ev2.kind}")(ev2.payload)
+            self._drain()
+        self._refresh_records()
+        return sorted(self.records.values(), key=lambda r: r.idJob)
+
+    def _drain(self) -> None:
+        """Tick the central module until quiescent, then plan wake-ups."""
+        for _ in range(1000):
+            self.central.tick()
+            if not self.central.has_pending:
+                break
+        self._schedule_completions()
+        self._schedule_wakeups()
+        self._sample_usage()
+
+    # ----------------------------------------------------------- event kinds
+    def _on_submit(self, p: dict) -> None:
+        jid = api.oarsub(
+            self.db, json.dumps({"kind": "sim", "duration": p["duration"],
+                                 "tag": p["tag"]}),
+            user=p["user"], queue=p["queue"], nb_nodes=p["nb_nodes"],
+            weight=p["weight"], max_time=p["max_time"],
+            properties=p["properties"],
+            reservation_start=p["reservation_start"],
+            best_effort=p["best_effort"], clock=lambda: self.now)
+        self.records[jid] = JobRecord(jid, self.now, p["duration"],
+                                      p["nb_nodes"] * p["weight"])
+
+    def _on_complete(self, payload: tuple[int, bool, str]) -> None:
+        jid, ok, msg = payload
+        if jobstate.get_state(self.db, jid) == jobstate.RUNNING:
+            self.central.executor.complete(jid, ok=ok, message=msg)
+
+    def _on_tick(self, _p) -> None:
+        # a planned wake-up exists to let the scheduler act (e.g. a granted
+        # reservation whose start time has come) — notify it explicitly
+        self.db.notify("scheduler")
+
+    def _on_fail(self, hostname: str) -> None:
+        self.transport.failed_hosts.add(hostname)
+        self.db.notify("monitor")
+
+    def _on_revive(self, hostname: str) -> None:
+        self.transport.failed_hosts.discard(hostname)
+        self.db.notify("monitor")
+
+    def _on_grow(self, payload) -> None:
+        hostnames, kw = payload
+        api.add_resources(self.db, hostnames, **kw)
+
+    # ----------------------------------------------------------- bookkeeping
+    def _schedule_completions(self) -> None:
+        rows = self.db.query(
+            "SELECT idJob, startTime, maxTime, command FROM jobs WHERE state='Running'")
+        for r in rows:
+            jid = r["idJob"]
+            if jid in self._completion_scheduled:
+                continue
+            self._completion_scheduled.add(jid)
+            try:
+                duration = json.loads(r["command"]).get("duration", r["maxTime"])
+            except (ValueError, TypeError):
+                duration = r["maxTime"]
+            if jid in self.records:
+                self.records[jid].start = r["startTime"]
+            else:  # resubmitted best-effort clones
+                self.records[jid] = JobRecord(jid, r["startTime"], duration, 0,
+                                              start=r["startTime"])
+            self.records[jid].resources = frozenset(
+                row["idResource"] for row in self.db.query(
+                    "SELECT idResource FROM assignments WHERE idJob=?", (jid,)))
+            if duration > r["maxTime"]:
+                self._push(r["startTime"] + r["maxTime"], "complete",
+                           (jid, False, "walltime exceeded"))
+            else:
+                self._push(r["startTime"] + duration, "complete", (jid, True, ""))
+
+    def _schedule_wakeups(self) -> None:
+        """Virtual-time analogue of periodic redundancy: wake at the next
+        time anything can change (granted reservation start)."""
+        t = self.db.scalar(
+            "SELECT MIN(reservationStart) FROM jobs WHERE state='Waiting' "
+            "AND reservation='Scheduled' AND reservationStart > ?", (self.now + EPS,))
+        if t is not None and not any(
+                e.kind == "tick" and abs(e.time - t) < EPS for e in self._heap):
+            self._push(t, "tick")
+
+    def _sample_usage(self) -> None:
+        used = self.db.scalar(
+            "SELECT COALESCE(SUM(r.weight),0) FROM assignments a "
+            "JOIN resources r ON r.idResource=a.idResource "
+            "JOIN jobs j ON j.idJob=a.idJob WHERE j.state IN "
+            "('toLaunch','Launching','Running')") or 0
+        if not self.trace or self.trace[-1][1] != used:
+            self.trace.append((self.now, used))
+
+    def _refresh_records(self) -> None:
+        for row in self.db.query(
+                "SELECT idJob, state, startTime, stopTime FROM jobs"):
+            rec = self.records.get(row["idJob"])
+            if rec is not None:
+                rec.state = row["state"]
+                rec.start = row["startTime"]
+                rec.stop = row["stopTime"]
+
+    # ------------------------------------------------------------- analysis
+    def utilisation(self, horizon: float | None = None) -> float:
+        """Integral of procs-in-use over time / (total_procs × makespan)."""
+        total = self.db.scalar("SELECT SUM(weight) FROM resources") or 1
+        end = horizon if horizon is not None else self.now
+        area, prev_t, prev_u = 0.0, 0.0, 0
+        for t, u in self.trace:
+            area += prev_u * (min(t, end) - prev_t)
+            prev_t, prev_u = t, u
+        area += prev_u * max(0.0, end - prev_t)
+        return area / (total * end) if end > 0 else 0.0

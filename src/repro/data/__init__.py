@@ -1,0 +1,2 @@
+from repro.data.pipeline import make_batch, synthetic_batches, data_iterator
+__all__ = ["make_batch", "synthetic_batches", "data_iterator"]

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the data-plane compute hot spots.
+
+Each kernel package: kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd wrapper, pallas/ref dispatch), ref.py (pure-jnp oracle).
+"""

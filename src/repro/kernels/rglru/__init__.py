@@ -1,0 +1,4 @@
+from repro.kernels.rglru.ops import lru_scan, lru_decode_step
+from repro.kernels.rglru.ref import lru_scan_ref, lru_decode_step_ref
+
+__all__ = ["lru_scan", "lru_decode_step", "lru_scan_ref", "lru_decode_step_ref"]

@@ -1,0 +1,24 @@
+"""jit'd public wrapper for the RG-LRU scan."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rglru.kernel import lru_scan_kernel
+from repro.kernels.rglru.ref import lru_scan_ref, lru_decode_step_ref
+
+__all__ = ["lru_scan", "lru_decode_step"]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_pallas"))
+def lru_scan(a, b, *, chunk: int = 128, use_pallas: bool = False):
+    """Gated linear recurrence h_t = a_t h_{t-1} + b_t over (B, S, W)."""
+    if not use_pallas:
+        return lru_scan_ref(a, b)
+    return lru_scan_kernel(a, b, chunk=chunk,
+                           interpret=jax.default_backend() != "tpu")
+
+
+lru_decode_step = jax.jit(lru_decode_step_ref)

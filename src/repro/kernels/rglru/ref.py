@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the RG-LRU gated linear recurrence (Griffin/
+RecurrentGemma).
+
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+with a_t = exp(-c·softplus(Λ)·r_t), r_t/i_t input-dependent sigmoid gates.
+The gate computation lives in the model; the scan here takes the already-
+formed per-step coefficients (a, b) — that split is what the Pallas kernel
+tiles. The reference uses an associative scan over the full sequence.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["lru_scan_ref", "lru_decode_step_ref"]
+
+
+def lru_scan_ref(a: jax.Array, b: jax.Array,
+                 initial_h: jax.Array | None = None) -> jax.Array:
+    """a, b: (B, S, W); h_t = a_t h_{t-1} + b_t. Returns h: (B, S, W)."""
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    comp_a, comp_b = jax.lax.associative_scan(combine, (af, bf), axis=1)
+    if initial_h is not None:
+        comp_b = comp_b + comp_a * initial_h.astype(jnp.float32)[:, None, :]
+    return comp_b.astype(a.dtype)
+
+
+def lru_decode_step_ref(h: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """One-token step. h, a, b: (B, W)."""
+    return (a.astype(jnp.float32) * h.astype(jnp.float32)
+            + b.astype(jnp.float32)).astype(h.dtype)

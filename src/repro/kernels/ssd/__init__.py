@@ -1,0 +1,4 @@
+from repro.kernels.ssd.ops import ssd, ssd_decode_step
+from repro.kernels.ssd.ref import ssd_ref, ssd_decode_step_ref
+
+__all__ = ["ssd", "ssd_decode_step", "ssd_ref", "ssd_decode_step_ref"]

@@ -1,0 +1,106 @@
+"""Mamba-2 SSD chunked scan as a Pallas TPU kernel.
+
+TPU adaptation of the SSD algorithm: grid ``(batch, heads, chunks)`` with the
+chunk dimension sequential ("arbitrary") so the (P × N) inter-chunk state
+lives in VMEM scratch and never round-trips HBM — the GPU implementation's
+separate state-passing kernel collapses into the grid carry. Per step the
+kernel streams one (Q × P) x-tile and (Q × N) B/C-tiles into VMEM, evaluates
+the intra-chunk quadratic form on the MXU (Q×N @ N×Q and Q×Q @ Q×P matmuls,
+Q and N chosen 128-aligned), and updates the carried state with one more
+MXU product. All state math is float32; a_t = exp(dt·A) < 1 keeps every
+decay factor in (0,1], so no log-space rescue is needed.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_kernel"]
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *,
+            num_chunks: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (Q,)
+    A = a_ref[0].astype(jnp.float32)                 # scalar
+    Bm = b_ref[0].astype(jnp.float32)                # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)                # (Q, N)
+
+    dA = dt * A                                      # (Q,) ≤ 0
+    cum = jnp.cumsum(dA)                             # (Q,)
+    u = dt[:, None] * x                              # (Q, P)
+
+    # intra-chunk quadratic form on the MXU
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (Q, Q)
+    # mask inside the exponent (upper triangle would overflow exp and
+    # poison the vjp with inf·0 — same guard as ref.py)
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, CB.shape, 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, CB.shape, 1)
+    diff = cum[:, None] - cum[None, :]
+    L = jnp.exp(jnp.where(iota_j <= iota_i, diff, -jnp.inf))
+    scores = CB * L
+    y_intra = jax.lax.dot_general(scores, u, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (Q,P)
+
+    # inter-chunk contribution of the carried state (P, N)
+    state = state_scr[...]
+    y_inter = jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (Q, N)·(P, N)^T → (Q, P)
+
+    y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: h' = exp(cum_Q) h + Σ_j exp(cum_Q - cum_j) u_j ⊗ B_j
+    decay_end = jnp.exp(cum[-1] - cum)               # (Q,)
+    ud = u * decay_end[:, None]                      # (Q, P)
+    state_scr[...] = (jnp.exp(cum[-1]) * state
+                      + jax.lax.dot_general(ud, Bm, (((0,), (0,)), ((), ())),
+                                            preferred_element_type=jnp.float32))
+
+
+def ssd_kernel(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+               Cm: jax.Array, *, chunk: int = 256,
+               interpret: bool = True) -> jax.Array:
+    """x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm, Cm: (B,S,N) → y: (B,S,H,P)."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    T = x.shape[1]
+    nc = T // Q
+
+    y = pl.pallas_call(
+        functools.partial(_kernel, num_chunks=nc),
+        grid=(Bsz, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, 1, P), lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)
+    return y[:, :S]

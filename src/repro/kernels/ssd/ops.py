@@ -1,0 +1,24 @@
+"""jit'd public wrapper for the SSD scan."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd.kernel import ssd_kernel
+from repro.kernels.ssd.ref import ssd_ref, ssd_decode_step_ref
+
+__all__ = ["ssd", "ssd_decode_step"]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_pallas"))
+def ssd(x, dt, A, Bm, Cm, *, chunk: int = 256, use_pallas: bool = False):
+    """Mamba-2 SSD scan. x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm,Cm: (B,S,N)."""
+    if not use_pallas:
+        return ssd_ref(x, dt, A, Bm, Cm, chunk=chunk)
+    return ssd_kernel(x, dt, A, Bm, Cm, chunk=chunk,
+                      interpret=jax.default_backend() != "tpu")
+
+
+ssd_decode_step = jax.jit(ssd_decode_step_ref)

@@ -1,0 +1,98 @@
+"""Pure-jnp oracle for the Mamba-2 SSD (state-space duality) chunked scan.
+
+Discrete SSD recurrence per head h (state h_t ∈ R^{P×N}):
+
+    a_t = exp(dt_t · A_h)                (A_h < 0 ⇒ a_t ∈ (0,1), stable)
+    h_t = a_t · h_{t-1} + (dt_t x_t) ⊗ B_t
+    y_t = h_t · C_t
+
+The chunked (duality) form evaluates each chunk's intra-chunk part as a
+masked quadratic attention-like product and carries inter-chunk state with a
+scan — exactly the structure the Pallas kernel tiles. This reference is the
+correctness oracle and the CPU model path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_ref", "ssd_decode_step_ref"]
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+            Cm: jax.Array, *, chunk: int = 256,
+            initial_state: jax.Array | None = None,
+            return_state: bool = False):
+    """x: (B,S,H,P); dt: (B,S,H) (>0, post-softplus); A: (H,) (<0);
+    Bm, Cm: (B,S,N) (single group, broadcast over heads).
+    Returns y: (B,S,H,P) [and final state (B,H,P,N)]."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    dtype = x.dtype
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    T = x.shape[1]
+    nc = T // Q
+
+    xf = x.astype(jnp.float32).reshape(Bsz, nc, Q, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bsz, nc, Q, H)
+    Bf = Bm.astype(jnp.float32).reshape(Bsz, nc, Q, N)
+    Cf = Cm.astype(jnp.float32).reshape(Bsz, nc, Q, N)
+    Af = A.astype(jnp.float32)
+
+    dA = dtf * Af                                    # (B,nc,Q,H) ≤ 0
+    cum = jnp.cumsum(dA, axis=2)                     # (B,nc,Q,H)
+    u = dtf[..., None] * xf                          # (B,nc,Q,H,P)
+
+    # ---- intra-chunk (the "duality" quadratic form)
+    # mask INSIDE the exponent: upper-triangle entries would otherwise
+    # overflow exp (their exponent is positive and unbounded) and poison
+    # the gradient with inf·0.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # (B,nc,i,j,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.exp(jnp.where(tri[None, None, :, :, None], diff, -jnp.inf))
+    CB = jnp.einsum("bcin,bcjn->bcij", Cf, Bf)                   # (B,nc,i,j)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", CB, L, u)
+
+    # ---- inter-chunk state carry
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)              # (B,nc,Q,H)
+    S_c = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", decay_to_end, Bf, u)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                      # (B,nc,H)
+
+    h0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(h, inputs):
+        s_c, dec = inputs                            # (B,H,P,N), (B,H)
+        h_start = h                                  # state at chunk start
+        h = dec[..., None, None] * h + s_c
+        return h, h_start
+
+    h_final, h_starts = jax.lax.scan(
+        step, h0, (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_starts = jnp.moveaxis(h_starts, 0, 1)          # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp",
+                         Cf, h_starts, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(Bsz, T, H, P)[:, :S].astype(dtype)
+    if return_state:
+        return y, h_final.astype(jnp.float32)
+    return y
+
+
+def ssd_decode_step_ref(state: jax.Array, x: jax.Array, dt: jax.Array,
+                        A: jax.Array, Bm: jax.Array, Cm: jax.Array):
+    """One-token recurrent step. state: (B,H,P,N); x: (B,H,P); dt: (B,H);
+    Bm, Cm: (B,N). Returns (y: (B,H,P), new_state)."""
+    dA = jnp.exp(dt.astype(jnp.float32) * A.astype(jnp.float32))   # (B,H)
+    u = (dt[..., None] * x).astype(jnp.float32)                    # (B,H,P)
+    new_state = (dA[..., None, None] * state.astype(jnp.float32)
+                 + u[..., None] * Bm[:, None, None, :].astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cm.astype(jnp.float32))
+    return y.astype(x.dtype), new_state

@@ -1,0 +1,307 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+against the production meshes, with ShapeDtypeStruct inputs only (no
+allocation). The two lines above run before ANY other import — jax locks
+the device count on first initialisation.
+
+Per cell this script:
+  1. builds the mesh ((16,16) or (2,16,16)),
+  2. lowers the cell's step function —
+       train_4k      → train_step (fwd + bwd + AdamW update),
+       prefill_32k   → prefill_step (prompt pass building the decode cache),
+       decode_*      → serve_step (one token over the persistent cache),
+  3. ``.compile()``s it (proving sharding coherence end-to-end),
+  4. prints ``memory_analysis()`` (fits?) and ``cost_analysis()`` (FLOPs /
+     bytes) and writes the roofline report JSON for EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh single --out experiments/dryrun
+  python -m repro.launch.dryrun --all --mesh multi          # 2-pod, 512 chips
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch.mesh import make_production_mesh
+from repro.parallel import sharding as shd
+from repro.parallel import steps as steps_mod
+from repro.roofline.analysis import analyze_compiled
+
+# archs whose baseline (DP×TP) state cannot fit 16 GB/chip — they use the
+# FSDP rule set as their baseline and EXPERIMENTS.md says so.
+FSDP_REQUIRED = {"llama3-405b", "mixtral-8x22b"}
+
+
+def input_specs(cfg, shape, *, microbatches: int = 1,
+                moments_dtype=jnp.float32):
+    """ShapeDtypeStruct stand-ins for every input of the cell's step."""
+    if shape.kind == "train":
+        state = steps_mod.abstract_train_state(cfg, moments_dtype=moments_dtype)
+        batch = steps_mod.abstract_batch(cfg, shape.global_batch,
+                                         shape.seq_len,
+                                         microbatches=microbatches)
+        return (state, batch)
+    if shape.kind == "prefill":
+        params = steps_mod.abstract_train_state(cfg)["params"]
+        params = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, jnp.bfloat16), params)
+        batch = steps_mod.abstract_batch(cfg, shape.global_batch,
+                                         shape.seq_len, dtype=jnp.bfloat16)
+        return (params, batch)
+    # decode
+    from repro.models import model as M
+    params = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, jnp.bfloat16),
+        M.abstract_params(cfg))
+    cache = M.abstract_cache(cfg, shape.global_batch, shape.seq_len,
+                             jnp.bfloat16)
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    return (params, cache, tokens, pos)
+
+
+def lower_cell(cfg, shape, mesh, rules, *, microbatches: int = 1,
+               unroll_mb: bool = False, bf16_params: bool = False,
+               bf16_moments: bool = False):
+    """Returns the lowered (not yet compiled) computation for one cell."""
+    if shape.kind == "train":
+        from repro.train.optimizer import OptConfig
+        opt = OptConfig(moments_dtype="bfloat16") if bf16_moments else None
+        fn = steps_mod.make_train_step(cfg, mesh, rules, opt=opt,
+                                       microbatches=microbatches,
+                                       unroll_mb=unroll_mb,
+                                       bf16_params=bf16_params)
+        state, batch = input_specs(
+            cfg, shape, microbatches=microbatches,
+            moments_dtype=jnp.bfloat16 if bf16_moments else jnp.float32)
+        return fn.lower(state, batch)
+    if shape.kind == "prefill":
+        fn = steps_mod.make_prefill_step(cfg, mesh, rules,
+                                         global_batch=shape.global_batch,
+                                         seq_len=shape.seq_len,
+                                         max_len=shape.seq_len)
+        params, batch = input_specs(cfg, shape)
+        return fn.lower(params, batch)
+    fn = steps_mod.make_serve_step(cfg, mesh, rules,
+                                   global_batch=shape.global_batch,
+                                   max_len=shape.seq_len)
+    params, cache, tokens, pos = input_specs(cfg, shape)
+    return fn.lower(params, cache, tokens, pos)
+
+
+def _depth_pair(cfg) -> tuple:
+    """Two reduced depths for cost extrapolation (pattern-aligned for
+    hybrids). XLA's cost analysis counts a while-loop body once, so scanned
+    full-depth numbers undercount by ~L; we compile small UNROLLED depths
+    L1 < L2 and extrapolate linearly — fused, post-SPMD, exact per-layer."""
+    if cfg.family == "hybrid":
+        p = len(cfg.block_pattern)
+        return p, 2 * p
+    return 1, 2
+
+
+def _with_depth(cfg, L: int):
+    kw = {"num_layers": L, "scan_layers": False}
+    if cfg.is_encdec:
+        kw["encoder_layers"] = L
+    return cfg.replace(**kw)
+
+
+def extrapolated_costs(arch: str, shape, mesh, rules, *,
+                       microbatches: int = 1, chunked: bool = False,
+                       bf16_params: bool = False, bf16_moments: bool = False,
+                       q_block: int = 1024, k_block: int = 1024) -> dict:
+    """(flops, bytes, wire_bytes) per device extrapolated to full depth."""
+    cfg = configs.get(arch)
+    if chunked:
+        cfg = cfg.replace(attn_chunked=True, attn_q_block=q_block,
+                          attn_k_block=k_block)
+    L1, L2 = _depth_pair(cfg)
+    vals = {}
+    for L in (L1, L2):
+        c = _with_depth(cfg, L)
+        with mesh:
+            # microbatch loop unrolled here so its work is fully counted
+            # (cost_analysis counts a lax.scan body once)
+            lowered = lower_cell(c, shape, mesh, rules,
+                                 microbatches=microbatches, unroll_mb=True,
+                                 bf16_params=bf16_params,
+                                 bf16_moments=bf16_moments)
+            compiled = lowered.compile()
+        ca = compiled.cost_analysis()
+        from repro.roofline.analysis import parse_collectives
+        wire = sum(op.wire_bytes for op in parse_collectives(compiled.as_text()))
+        vals[L] = (float(ca.get("flops", 0.0)),
+                   float(ca.get("bytes accessed", 0.0)), wire)
+    L = cfg.num_layers
+    out = {}
+    for i, key in enumerate(("flops", "bytes", "wire_bytes")):
+        per_layer = (vals[L2][i] - vals[L1][i]) / (L2 - L1)
+        out[key] = max(vals[L1][i] + per_layer * (L - L1), 0.0)
+        out[key + "_per_layer"] = per_layer
+        out[key + "_base"] = vals[L1][i] - per_layer * L1   # outside-stack part
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             rules_name: str | None = None, out_dir: str | None = None,
+             microbatches: int = 1, fsdp: bool | None = None,
+             rules_kind: str | None = None, chunked: bool = False,
+             bf16_params: bool = False, bf16_moments: bool = False,
+             q_block: int = 1024, k_block: int = 1024,
+             extrapolate: bool = True, verbose: bool = True):
+    cfg = configs.get(arch)
+    if chunked:
+        cfg = cfg.replace(attn_chunked=True, attn_q_block=q_block,
+                          attn_k_block=k_block)
+    shape = configs.shape_for(shape_name)
+    ok, why = configs.cell_supported(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    if not ok:
+        if verbose:
+            print(f"SKIP  {arch} × {shape_name} [{mesh_name}]: {why}")
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "skipped": why}
+    if fsdp is None:
+        fsdp = arch in FSDP_REQUIRED
+    if rules_kind in ("zero", "tp2d"):
+        rules = shd.make_rules(multi_pod=multi_pod,
+                               zero=rules_kind == "zero",
+                               tp2d=rules_kind == "tp2d")
+        base = rules_kind
+    else:
+        rules = shd.make_rules(multi_pod=multi_pod, fsdp=fsdp)
+        base = "fsdp" if fsdp else "baseline"
+    if rules_name is None:
+        rules_name = base + ("_mp" if multi_pod else "")
+        if chunked:
+            rules_name += "_chunked"
+            if (q_block, k_block) != (1024, 1024):
+                rules_name += f"_qb{q_block}kb{k_block}"
+        if bf16_params:
+            rules_name += "_bf16p"
+        if bf16_moments:
+            rules_name += "_bf16m"
+        if microbatches > 1:
+            rules_name += f"_mb{microbatches}"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.perf_counter()
+    with mesh:
+        lowered = lower_cell(cfg, shape, mesh, rules, microbatches=microbatches,
+                             bf16_params=bf16_params, bf16_moments=bf16_moments)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+    overrides = None
+    if extrapolate:
+        costs = extrapolated_costs(arch, shape, mesh, rules,
+                                   microbatches=microbatches,
+                                   chunked=chunked, bf16_params=bf16_params,
+                                   bf16_moments=bf16_moments,
+                                   q_block=q_block, k_block=k_block)
+        overrides = costs
+    report = analyze_compiled(compiled, arch=arch, shape=shape,
+                              mesh_name=mesh_name, rules_name=rules_name,
+                              devices=mesh.size, cfg=cfg,
+                              cost_overrides=overrides)
+    if not extrapolate and shape.kind == "train":
+        # scanned-body costs are undercounted without extrapolation: this
+        # run proves compile + memory placement only
+        report.skipped = "proof_only: costs not extrapolated"
+
+    if verbose:
+        mem = compiled.memory_analysis()
+        print(f"OK    {arch} × {shape_name} [{mesh_name}/{rules_name}] "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print(f"      memory_analysis: args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+              f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB "
+              f"out={mem.output_size_in_bytes/2**30:.2f}GiB")
+        ca = compiled.cost_analysis()
+        print(f"      cost_analysis: flops/dev={ca.get('flops', 0):.3e} "
+              f"bytes/dev={ca.get('bytes accessed', 0):.3e}")
+        t = report.terms
+        print(f"      roofline: compute={t['compute_s']*1e3:.2f}ms "
+              f"memory={t['memory_s']*1e3:.2f}ms "
+              f"collective={t['collective_s']*1e3:.2f}ms "
+              f"→ {t['dominant']}-bound; useful_ratio={report.useful_ratio:.3f} "
+              f"roofline_frac={report.roofline_fraction:.3f}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir,
+                            f"{arch}__{shape_name}__{mesh_name}__{rules_name}.json")
+        with open(path, "w") as f:
+            f.write(report.to_json())
+    import dataclasses
+    return dataclasses.asdict(report)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=configs.ARCHS)
+    ap.add_argument("--shape", choices=sorted(configs.SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--rules", choices=["auto", "baseline", "fsdp", "zero",
+                                        "tp2d"],
+                    default="auto")
+    ap.add_argument("--chunked", action="store_true",
+                    help="blockwise online-softmax attention (XLA flash)")
+    ap.add_argument("--bf16-params", action="store_true",
+                    help="cast f32 master params to bf16 once per step")
+    ap.add_argument("--bf16-moments", action="store_true",
+                    help="Adam mu/nu stored in bf16 (8 B/param state)")
+    ap.add_argument("--q-block", type=int, default=1024)
+    ap.add_argument("--k-block", type=int, default=1024)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch × shape) cell")
+    ap.add_argument("--no-extrapolate", action="store_true",
+                    help="proof-only pass: skip the depth-extrapolation "
+                         "compiles (multi-pod sweep)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    cells = ([(a, s) for a in configs.ARCHS for s in configs.SHAPES]
+             if args.all else [(args.arch, args.shape)])
+    fsdp = None if args.rules == "auto" else (args.rules == "fsdp")
+    failures = []
+    for multi in meshes:
+        for arch, shape in cells:
+            if arch is None or shape is None:
+                ap.error("--arch/--shape required unless --all")
+            try:
+                run_cell(arch, shape, multi_pod=multi, out_dir=args.out,
+                         microbatches=args.microbatches, fsdp=fsdp,
+                         rules_kind=args.rules if args.rules in
+                         ("zero", "tp2d") else None,
+                         chunked=args.chunked,
+                         bf16_params=args.bf16_params,
+                         bf16_moments=args.bf16_moments,
+                         q_block=args.q_block, k_block=args.k_block,
+                         extrapolate=not args.no_extrapolate)
+            except Exception as exc:  # noqa: BLE001
+                failures.append((arch, shape, multi, repr(exc)))
+                print(f"FAIL  {arch} × {shape} multi={multi}: {exc}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILED CELLS:")
+        for f in failures:
+            print("  ", f)
+        sys.exit(1)
+    print("\nall requested dry-run cells compiled successfully")
+
+
+if __name__ == "__main__":
+    main()

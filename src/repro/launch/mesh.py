@@ -1,0 +1,44 @@
+"""Mesh construction for the production topology.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module does not touch jax device state. The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; everything else sees the real device count.
+
+Topology: TPU v5e pods of 256 chips. Single-pod mesh (16, 16) with axes
+(data, model); two-pod mesh (2, 16, 16) with axes (pod, data, model) — the
+leading `pod` axis maps onto the inter-pod DCI/optical links, so data-
+parallel gradient reduction crosses pods once per step while model-parallel
+collectives stay inside a pod's ICI torus.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_local_mesh", "HW"]
+
+
+# TPU v5e hardware constants (per chip), used by the roofline analysis.
+HW = {
+    "peak_flops_bf16": 197e12,     # FLOP/s
+    "hbm_bw": 819e9,               # B/s
+    "ici_bw": 50e9,                # B/s per link
+    "hbm_bytes": 16 * 2**30,
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_axis: int = 1) -> Mesh:
+    """Mesh over whatever devices exist (CPU smoke tests / tiny trainer)."""
+    n = jax.device_count()
+    assert n % model_axis == 0
+    devs = np.array(jax.devices()).reshape(n // model_axis, model_axis)
+    return Mesh(devs, ("data", "model"))

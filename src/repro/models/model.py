@@ -1,0 +1,270 @@
+"""Model assembly: param shapes, forward/loss, prefill and decode steps for
+every assigned architecture family.
+
+Scan-over-layers is the default (depth-independent HLO ⇒ fast compiles and
+bounded dry-run cost); hybrids with a non-uniform layer pattern unroll.
+All public functions treat ``cfg`` as static (hashable frozen dataclass).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.layers import (ParamSpec, abstract_tree, init_tree,
+                                 rms_norm, take_embedding)
+from repro.models.ssm import ssm_cache_shapes
+from repro.parallel.ctx import constrain_logical
+from repro.models.rglru import rglru_cache_shapes
+
+__all__ = ["param_shapes", "init_params", "abstract_params", "forward",
+           "loss_fn", "cache_shapes", "init_cache", "abstract_cache",
+           "decode_step", "prefill", "compute_dtype"]
+
+
+def compute_dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _uniform_scan(cfg) -> bool:
+    kinds = tfm.layer_kinds(cfg)
+    return cfg.scan_layers and len(set(kinds)) == 1
+
+
+# --------------------------------------------------------------------- specs
+def param_shapes(cfg) -> dict:
+    kinds = tfm.layer_kinds(cfg)
+    D, V = cfg.d_model, cfg.vocab_size
+    specs: dict[str, Any] = {
+        "embed": ParamSpec((V, D), ("vocab", "embed"), init="embed"),
+        "final_norm": ParamSpec((D,), ("embed",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = ParamSpec((D, V), ("embed", "vocab"))
+    if _uniform_scan(cfg):
+        block = tfm.block_specs(cfg, kinds[0])
+        specs["layers"] = jax.tree_util.tree_map(
+            lambda s: s.with_prefix(cfg.num_layers), block,
+            is_leaf=lambda x: isinstance(x, ParamSpec))
+    else:
+        specs["layers"] = {f"layer_{i}": tfm.block_specs(cfg, k)
+                           for i, k in enumerate(kinds)}
+    if cfg.is_encdec:
+        enc_block = tfm.block_specs(cfg, "enc_attn")
+        specs["encoder"] = {
+            "layers": jax.tree_util.tree_map(
+                lambda s: s.with_prefix(cfg.encoder_layers), enc_block,
+                is_leaf=lambda x: isinstance(x, ParamSpec)),
+            "final_norm": ParamSpec((D,), ("embed",), init="ones"),
+        }
+    return specs
+
+
+def init_params(cfg, rng, dtype=jnp.float32):
+    return init_tree(param_shapes(cfg), rng, dtype)
+
+
+def abstract_params(cfg, dtype=jnp.float32):
+    return abstract_tree(param_shapes(cfg), dtype)
+
+
+# -------------------------------------------------------------------- trunk
+def _stack_apply(layers_p, x, cfg, kinds, *, memory=None):
+    """Run the layer stack. Returns (x, aux)."""
+    if _uniform_scan(cfg):
+        kind = kinds[0]
+
+        def body(carry, layer_p):
+            h, aux = carry
+            h, a = tfm.block_apply(layer_p, h, cfg, kind, memory=memory)
+            return (h, aux + a), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), layers_p)
+        return x, aux
+    aux = jnp.float32(0.0)
+    for i, kind in enumerate(kinds):
+        blk = functools.partial(tfm.block_apply, kind=kind, memory=memory)
+        if cfg.remat:
+            blk = jax.checkpoint(blk, static_argnums=(2,))
+            x, a = blk(layers_p[f"layer_{i}"], x, cfg)
+        else:
+            x, a = blk(layers_p[f"layer_{i}"], x, cfg)
+        aux = aux + a
+    return x, aux
+
+
+def _encoder_apply(params, cfg, embeds):
+    enc = params["encoder"]
+
+    def body(carry, layer_p):
+        h, = carry
+        h, _ = tfm.block_apply(layer_p, h, cfg, "enc_attn")
+        return (h,), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x,), _ = jax.lax.scan(body, (embeds,), enc["layers"])
+    return rms_norm(x, enc["final_norm"], cfg.norm_eps)
+
+
+def _embed_inputs(params, cfg, batch):
+    dt = compute_dtype(cfg)
+    x = take_embedding(params["embed"], batch["tokens"], dt)
+    if cfg.family == "vlm":
+        x = jnp.concatenate([batch["vision_embeds"].astype(dt), x], axis=1)
+    return constrain_logical(x, ("batch", "seq", "act_embed"))
+
+
+def _unembed(params, cfg, x):
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(x.dtype)
+        logits = jnp.einsum("bsd,vd->bsv", x, w)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype))
+    return constrain_logical(logits.astype(jnp.float32),
+                             ("batch", "seq", "vocab"))
+
+
+def forward(params, cfg, batch) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (logits (B,S,V) float32, aux loss)."""
+    kinds = tfm.layer_kinds(cfg)
+    x = _embed_inputs(params, cfg, batch)
+    memory = None
+    if cfg.is_encdec:
+        memory = _encoder_apply(params, cfg,
+                                batch["audio_embeds"].astype(x.dtype))
+    x, aux = _stack_apply(params["layers"], x, cfg, kinds, memory=memory)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return _unembed(params, cfg, x), aux
+
+
+def loss_fn(params, cfg, batch) -> jax.Array:
+    """Next-token cross entropy (+ MoE aux). VLM skips the vision prefix."""
+    logits, aux = forward(params, cfg, batch)
+    F = cfg.frontend_tokens if cfg.family == "vlm" else 0
+    tokens = batch["tokens"]
+    preds = logits[:, F:F + tokens.shape[1] - 1]         # predicts tokens[1:]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(preds, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is not None:
+        m = mask[:, 1:].astype(jnp.float32)
+        ce = -jnp.sum(ll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    else:
+        ce = -jnp.mean(ll)
+    return ce + aux
+
+
+# -------------------------------------------------------------------- cache
+def _layer_cache_shapes(cfg, kind: str, batch: int, max_len: int, dtype):
+    K, Dh = cfg.num_kv_heads, cfg.head_dim
+    if kind == "ssm":
+        return ssm_cache_shapes(cfg, batch, dtype)
+    if kind == "rglru":
+        return rglru_cache_shapes(cfg, batch, dtype)
+    slots = max_len
+    if kind == "local_attn" or cfg.attention == "swa":
+        slots = min(cfg.window, max_len)
+    c = {"k": ((batch, slots, K, Dh), dtype), "v": ((batch, slots, K, Dh), dtype)}
+    if kind == "cross":
+        F = cfg.frontend_tokens
+        c["enc_k"] = ((batch, F, K, Dh), dtype)
+        c["enc_v"] = ((batch, F, K, Dh), dtype)
+    return c
+
+
+def cache_shapes(cfg, batch: int, max_len: int, dtype=None) -> dict:
+    """Nested {name: (shape, dtype)} decode-cache description."""
+    dtype = compute_dtype(cfg) if dtype is None else dtype
+    kinds = tfm.layer_kinds(cfg)
+    if _uniform_scan(cfg):
+        per = _layer_cache_shapes(cfg, kinds[0], batch, max_len, dtype)
+        return {"layers": {k: ((cfg.num_layers, *shape), dt)
+                           for k, (shape, dt) in per.items()}}
+    return {"layers": {f"layer_{i}": _layer_cache_shapes(cfg, k, batch,
+                                                         max_len, dtype)
+                       for i, k in enumerate(kinds)}}
+
+
+def _is_shape_leaf(x):
+    return (isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple))
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=None):
+    return jax.tree_util.tree_map(
+        lambda sd: jnp.zeros(sd[0], sd[1]),
+        cache_shapes(cfg, batch, max_len, dtype), is_leaf=_is_shape_leaf)
+
+
+def abstract_cache(cfg, batch: int, max_len: int, dtype=None):
+    return jax.tree_util.tree_map(
+        lambda sd: jax.ShapeDtypeStruct(sd[0], sd[1]),
+        cache_shapes(cfg, batch, max_len, dtype), is_leaf=_is_shape_leaf)
+
+
+# ------------------------------------------------------------------- decode
+def decode_step(params, cfg, cache, tokens, pos):
+    """One decode step. tokens: (B, 1) int32; pos: scalar int32 (absolute
+    position of this token). Returns (logits (B, V) f32, new_cache)."""
+    kinds = tfm.layer_kinds(cfg)
+    dt = compute_dtype(cfg)
+    x = take_embedding(params["embed"], tokens, dt)
+    layers_c = cache["layers"]
+    if _uniform_scan(cfg):
+        kind = kinds[0]
+
+        def body(h, layer):
+            layer_p, layer_c = layer
+            h, new_c = tfm.block_decode(layer_p, h, layer_c, pos, cfg, kind)
+            return h, new_c
+
+        x, new_layers = jax.lax.scan(body, x, (params["layers"], layers_c))
+    else:
+        new_layers = {}
+        for i, kind in enumerate(kinds):
+            x, new_layers[f"layer_{i}"] = tfm.block_decode(
+                params["layers"][f"layer_{i}"], x, layers_c[f"layer_{i}"],
+                pos, cfg, kind)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(params, cfg, x)[:, 0]
+    return logits, {"layers": new_layers}
+
+
+# ------------------------------------------------------------------ prefill
+def prefill(params, cfg, batch, max_len: int):
+    """Process the prompt, build the decode cache.
+
+    Returns (last_logits (B, V) f32, cache). For enc-dec, also encodes the
+    audio memory into per-layer cross K/V cache entries.
+    """
+    kinds = tfm.layer_kinds(cfg)
+    x = _embed_inputs(params, cfg, batch)
+    memory = None
+    if cfg.is_encdec:
+        memory = _encoder_apply(params, cfg,
+                                batch["audio_embeds"].astype(x.dtype))
+    layers_p = params["layers"]
+    if _uniform_scan(cfg):
+        kind = kinds[0]
+
+        def body(h, layer_p):
+            h, layer_cache, _ = tfm.block_prefill(layer_p, h, cfg, kind,
+                                                  max_len, memory=memory)
+            return h, layer_cache
+
+        x, caches = jax.lax.scan(body, x, layers_p)
+    else:
+        caches = {}
+        for i, kind in enumerate(kinds):
+            x, caches[f"layer_{i}"], _ = tfm.block_prefill(
+                layers_p[f"layer_{i}"], x, cfg, kind, max_len, memory=memory)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(params, cfg, x[:, -1:])[:, 0]
+    return logits, {"layers": caches}

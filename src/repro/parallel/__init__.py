@@ -1,0 +1,2 @@
+"""pjit/shard_map distribution layer: logical-axis sharding rules, sharding
+context for activation constraints, and the train/prefill/serve step makers."""

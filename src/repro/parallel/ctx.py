@@ -1,0 +1,70 @@
+"""Sharding context: lets pure model code place logical-axis constraints
+without threading mesh objects through every call.
+
+`steps.make_*_step` enters :func:`sharding_ctx` around tracing; model code
+calls :func:`constrain_logical(x, ("batch", "seq", "vocab"))` at activation
+boundaries (embeddings, logits, MoE dispatch). Outside any context the call
+is the identity, so single-device smoke tests pay nothing.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["sharding_ctx", "constrain_logical"]
+
+_TLS = threading.local()
+
+
+@contextmanager
+def sharding_ctx(mesh, rules: dict):
+    prev = getattr(_TLS, "ctx", None)
+    _TLS.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _TLS.ctx = prev
+
+
+def _pspec(axes, rules) -> P:
+    entries = []
+    used: set[str] = set()
+    for ax in axes:
+        mesh_axes = tuple(a for a in (rules.get(ax, ()) or ()) if a not in used)
+        used.update(mesh_axes)
+        if not mesh_axes:
+            entries.append(None)
+        elif len(mesh_axes) == 1:
+            entries.append(mesh_axes[0])
+        else:
+            entries.append(mesh_axes)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def constrain_logical(x: jax.Array, axes: tuple) -> jax.Array:
+    ctx = getattr(_TLS, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    pspec = _pspec(axes, rules)
+    # drop axes the dim is not divisible by (mirrors sharding.spec_to_pspec)
+    entries = list(tuple(pspec)) + [None] * (x.ndim - len(tuple(pspec)))
+    for i, entry in enumerate(entries):
+        if entry is None:
+            continue
+        axs = entry if isinstance(entry, tuple) else (entry,)
+        keep, n = [], 1
+        for a in axs:
+            if x.shape[i] % (n * mesh.shape[a]) == 0:
+                keep.append(a)
+                n *= mesh.shape[a]
+        entries[i] = tuple(keep) if len(keep) > 1 else (keep[0] if keep else None)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*entries)))

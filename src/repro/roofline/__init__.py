@@ -1,0 +1,3 @@
+from repro.roofline.analysis import (parse_collectives, roofline_terms,
+                                     analyze_compiled, model_flops)
+__all__ = ["parse_collectives", "roofline_terms", "analyze_compiled", "model_flops"]

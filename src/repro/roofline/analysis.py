@@ -1,0 +1,188 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds-per-step on TPU v5e:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = wire_bytes_per_device / ICI_bw
+
+``cost_analysis()`` supplies per-partition FLOPs and bytes. Collective wire
+bytes are parsed from the post-SPMD optimized HLO: for each all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op we take the
+result-shape bytes and apply the ring-algorithm wire factor for its
+replica-group size g:
+
+    all-reduce      2·(g-1)/g · bytes
+    all-gather        (g-1)/g · bytes
+    reduce-scatter    (g-1)   · bytes      (operand = g × result)
+    all-to-all        (g-1)/g · bytes
+    collective-permute        1 · bytes
+
+MODEL_FLOPS uses 6·N·D (train) / 2·N·D (inference) with N = (active)
+params, D = tokens; the ratio MODEL_FLOPS / (HLO_FLOPs × devices) exposes
+remat recompute and padding waste.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import asdict, dataclass, field
+
+from repro.launch.mesh import HW
+
+__all__ = ["CollectiveOp", "parse_collectives", "roofline_terms",
+           "CellReport", "analyze_compiled", "model_flops"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9_]+\[[0-9,]*\](?:\{[^}]*\})?))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(([^\n]*)")
+_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    group_size: int
+    wire_bytes: float
+
+
+def _wire_factor(kind: str, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / g
+    if kind == "all-gather":
+        return (g - 1) / g
+    if kind == "reduce-scatter":
+        return float(g - 1)
+    if kind == "all-to-all":
+        return (g - 1) / g
+    return 1.0  # collective-permute
+
+
+def parse_collectives(hlo_text: str) -> list[CollectiveOp]:
+    out = []
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind, rest = m.group(1), m.group(2), m.group(3)
+        nbytes = _shape_bytes(shape_str)
+        g = 1
+        gm = _GROUPS_LIST_RE.search(rest)
+        if gm:
+            g = len(gm.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(rest)
+            if gi:
+                g = int(gi.group(2))   # [num_groups, group_size]
+        out.append(CollectiveOp(kind, nbytes, g, nbytes * _wire_factor(kind, g)))
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D (train) / 2·N·D (prefill) / 2·N·B (decode), N = active params."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # decode: one token per row
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   wire_bytes_per_dev: float) -> dict:
+    t = {
+        "compute_s": flops_per_dev / HW["peak_flops_bf16"],
+        "memory_s": bytes_per_dev / HW["hbm_bw"],
+        "collective_s": wire_bytes_per_dev / HW["ici_bw"],
+    }
+    t["dominant"] = max(("compute_s", "memory_s", "collective_s"),
+                        key=lambda k: t[k]).replace("_s", "")
+    t["bound_s"] = max(t["compute_s"], t["memory_s"], t["collective_s"])
+    # roofline fraction: useful-compute time over the modelled step time
+    return t
+
+
+@dataclass
+class CellReport:
+    arch: str
+    shape: str
+    mesh: str
+    rules: str
+    devices: int
+    flops_per_dev: float
+    bytes_per_dev: float
+    wire_bytes_per_dev: float
+    collectives: dict = field(default_factory=dict)
+    terms: dict = field(default_factory=dict)
+    model_flops_total: float = 0.0
+    useful_ratio: float = 0.0          # MODEL_FLOPS / (HLO_FLOPs × devices)
+    roofline_fraction: float = 0.0     # useful compute time / bound time
+    memory: dict = field(default_factory=dict)
+    skipped: str = ""
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), indent=1)
+
+
+def analyze_compiled(compiled, *, arch: str, shape, mesh_name: str,
+                     rules_name: str, devices: int, cfg,
+                     cost_overrides: dict | None = None) -> CellReport:
+    cost = compiled.cost_analysis()
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    colls = parse_collectives(compiled.as_text())
+    wire = sum(c.wire_bytes for c in colls)
+    if cost_overrides:   # depth-extrapolated numbers (see dryrun.py)
+        flops = cost_overrides.get("flops", flops)
+        nbytes = cost_overrides.get("bytes", nbytes)
+        wire = cost_overrides.get("wire_bytes", wire)
+    by_kind: dict[str, dict] = {}
+    for c in colls:
+        d = by_kind.setdefault(c.kind, {"count": 0, "wire_bytes": 0.0})
+        d["count"] += 1
+        d["wire_bytes"] += c.wire_bytes
+    terms = roofline_terms(flops, nbytes, wire)
+    mf = model_flops(cfg, shape)
+    useful = mf / max(flops * devices, 1.0)
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            mem[k] = int(getattr(ma, k, 0))
+        mem["total_gb"] = round((mem.get("argument_size_in_bytes", 0)
+                                 + mem.get("temp_size_in_bytes", 0)) / 2**30, 3)
+    except Exception:
+        pass
+    useful_time = mf / devices / HW["peak_flops_bf16"]
+    frac = useful_time / terms["bound_s"] if terms["bound_s"] > 0 else 0.0
+    return CellReport(
+        arch=arch, shape=shape.name, mesh=mesh_name, rules=rules_name,
+        devices=devices, flops_per_dev=flops, bytes_per_dev=nbytes,
+        wire_bytes_per_dev=wire, collectives=by_kind, terms=terms,
+        model_flops_total=mf, useful_ratio=useful,
+        roofline_fraction=frac, memory=mem)

@@ -1,0 +1,58 @@
+"""Roofline report generator: experiments/dryrun/*.json → markdown table.
+
+    PYTHONPATH=src python -m repro.roofline.report [--dir experiments/dryrun]
+                                                   [--mesh pod16x16]
+
+Prints the §Roofline table (one row per cell JSON) sorted by arch/shape,
+flagging the dominant term and the roofline fraction. Used to regenerate
+EXPERIMENTS.md §Roofline after new dry-run sweeps.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dir_: str, mesh: str | None) -> list[dict]:
+    rows = []
+    for p in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        d = json.load(open(p))
+        if d.get("skipped"):
+            continue
+        if mesh and d["mesh"] != mesh:
+            continue
+        rows.append(d)
+    rows.sort(key=lambda d: (d["arch"], d["shape"], d["rules"]))
+    return rows
+
+
+def table(rows: list[dict]) -> str:
+    out = ["| arch | shape | rules | compute (s) | memory (s) | "
+           "collective (s) | dominant | useful | roofline frac | GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for d in rows:
+        t = d["terms"]
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {d['rules']} "
+            f"| {t['compute_s']:.3f} | {t['memory_s']:.3f} "
+            f"| {t['collective_s']:.3f} | {t['dominant']} "
+            f"| {d['useful_ratio']:.3f} | {d['roofline_fraction']:.3f} "
+            f"| {d['memory'].get('total_gb', 0):.1f} |")
+    return "\n".join(out)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--all-meshes", action="store_true")
+    args = ap.parse_args(argv)
+    rows = load(args.dir, None if args.all_meshes else args.mesh)
+    print(table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Atomic, resumable checkpointing for train state.
+
+Layout: ``<dir>/step_<N>/state.npz`` + ``meta.json``, written to a temp dir
+and ``os.replace``d into place — a crash mid-save never corrupts the latest
+checkpoint (the same atomic-commit contract the control plane gets from
+sqlite). ``keep`` bounds disk usage; ``restore_latest`` returns the newest
+complete checkpoint, so a preempted/failed job resumes exactly where it
+checkpointed (OAR's best-effort resubmission passes ``checkpointPath``
+through the jobs table).
+
+Multi-host note: on a real cluster each host writes its own shard files
+under ``state-shard<k>.npz`` keyed by process index; this container is
+single-process so one file carries everything.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore_latest", "latest_step", "list_steps"]
+
+_KEY_SEP = "|"
+
+
+def _flatten(state) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
+        key = _KEY_SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                            for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(ckpt_dir: str, state, step: int, *, keep: int = 3,
+         extra_meta: dict | None = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(prefix=".tmp_ckpt_", dir=ckpt_dir)
+    try:
+        np.savez(os.path.join(tmp, "state.npz"), **_flatten(state))
+        meta = {"step": int(step), **(extra_meta or {})}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)              # atomic commit
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = list_steps(ckpt_dir)
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def list_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "meta.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = list_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore_latest(ckpt_dir: str, state_like):
+    """Restore the newest checkpoint into the structure of ``state_like``
+    (a pytree of arrays or ShapeDtypeStructs). Returns (state, step) or
+    (None, None) when no checkpoint exists."""
+    step = latest_step(ckpt_dir)
+    if step is None:
+        return None, None
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "state.npz")
+    with np.load(path) as data:
+        flat = dict(data.items())
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(state_like)
+    leaves = []
+    for path_k, like in leaves_like:
+        key = _KEY_SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                            for p in path_k)
+        arr = flat[key]
+        assert tuple(arr.shape) == tuple(like.shape), (key, arr.shape, like.shape)
+        leaves.append(jax.numpy.asarray(arr, dtype=like.dtype))
+    treedef = jax.tree_util.tree_structure(state_like)
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

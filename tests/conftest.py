@@ -1,0 +1,10 @@
+import os
+import sys
+
+# tests must see the real device count (1), NOT the dry-run's 512 — the
+# dry-run sets its flag itself, in its own process.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")

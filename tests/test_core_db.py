@@ -1,0 +1,64 @@
+"""State store: schema, transactions, crash recovery, notifications."""
+
+import os
+
+import pytest
+
+from repro.core import connect
+from repro.core import jobstate
+from repro.core.api import oarsub, add_resources
+
+
+def test_schema_created():
+    db = connect()
+    tables = {r["name"] for r in db.query(
+        "SELECT name FROM sqlite_master WHERE type='table'")}
+    assert {"jobs", "resources", "assignments", "queues",
+            "admission_rules", "gantt", "event_log"} <= tables
+    assert db.scalar("SELECT COUNT(*) FROM queues") == 3
+    assert db.scalar("SELECT COUNT(*) FROM admission_rules") > 0
+
+
+def test_transaction_rollback():
+    db = connect()
+    add_resources(db, ["h0"])
+    with pytest.raises(RuntimeError):
+        with db.transaction() as cur:
+            cur.execute("INSERT INTO resources(hostname) VALUES ('h1')")
+            raise RuntimeError("boom")
+    assert db.scalar("SELECT COUNT(*) FROM resources") == 1
+
+
+def test_crash_recovery_from_file(tmp_path):
+    """§2: reopening the DB recovers the full system state — mid-flight
+    jobs included. Kill the process state, reopen, everything is there."""
+    path = str(tmp_path / "oar.db")
+    db = connect(path, fresh=True)
+    add_resources(db, [f"h{i}" for i in range(4)])
+    jid = oarsub(db, "sleep", nb_nodes=2)
+    jobstate.set_state(db, jid, jobstate.TO_LAUNCH)
+    db.close()                      # "crash"
+
+    db2 = connect(path)             # restart against the same store
+    row = db2.query_one("SELECT state, nbNodes FROM jobs WHERE idJob=?", (jid,))
+    assert row["state"] == "toLaunch"
+    assert row["nbNodes"] == 2
+    assert db2.scalar("SELECT COUNT(*) FROM resources") == 4
+    db2.close()
+
+
+def test_notifications_reach_hooks():
+    db = connect()
+    seen = []
+    db.add_notify_hook(seen.append)
+    add_resources(db, ["h0"])
+    oarsub(db, "x")
+    assert "submission" in seen and "scheduler" in seen
+
+
+def test_event_log_is_queryable():
+    db = connect()
+    add_resources(db, ["h0"])
+    jid = oarsub(db, "x", user="alice")
+    rows = db.query("SELECT * FROM event_log WHERE job_id=?", (jid,))
+    assert rows and rows[0]["module"] == "oarsub"

@@ -1,0 +1,89 @@
+"""Gantt structure: unit + hypothesis property tests.
+
+Invariant under any sequence of occupy operations: a resource is free over
+a window iff no occupy interval covering any part of the window removed it;
+find_slot never returns resources that violate that."""
+
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gantt import Gantt
+
+
+def test_basic_occupy_and_find():
+    g = Gantt({1, 2, 3, 4}, origin=0.0)
+    g.occupy({1, 2}, 0.0, 10.0)
+    t, rids = g.find_slot({1, 2, 3, 4}, 2, 5.0, after=0.0)
+    assert t == 0.0 and rids == {3, 4}
+    t, rids = g.find_slot({1, 2, 3, 4}, 4, 5.0, after=0.0)
+    assert t == 10.0 and rids == {1, 2, 3, 4}
+
+
+def test_exact_start_reservation():
+    g = Gantt({1, 2}, origin=0.0)
+    g.occupy({1}, 5.0, 15.0)
+    assert g.find_slot({1, 2}, 2, 3.0, exact_start=2.0) == (2.0, {1, 2})
+    assert g.find_slot({1, 2}, 2, 5.0, exact_start=2.0) is None  # overlaps
+    t, rids = g.find_slot({1, 2}, 1, 5.0, exact_start=6.0)
+    assert rids == {2}
+
+
+def test_find_in_hole_backfilling_shape():
+    """A narrow job fits the hole in front of a wide future occupation."""
+    g = Gantt({1, 2, 3, 4}, origin=0.0)
+    g.occupy({1, 2}, 0.0, 100.0)          # running
+    g.occupy({1, 2, 3, 4}, 100.0, 200.0)  # wide job planned behind it
+    t, rids = g.find_slot({1, 2, 3, 4}, 2, 50.0)
+    assert t == 0.0 and rids == {3, 4}    # backfill the hole
+    t2, _ = g.find_slot({1, 2, 3, 4}, 2, 150.0)
+    assert t2 == 200.0                    # too long for the hole
+
+
+def test_prefer_order():
+    g = Gantt({1, 2, 3}, origin=0.0)
+    _, rids = g.find_slot({1, 2, 3}, 1, 1.0, prefer=[3, 1, 2])
+    assert rids == {3}
+
+
+intervals = st.lists(
+    st.tuples(st.sampled_from([frozenset({1}), frozenset({2}),
+                               frozenset({1, 2}), frozenset({2, 3})]),
+              st.floats(0, 50, allow_nan=False),
+              st.floats(1, 30, allow_nan=False)),
+    max_size=8)
+
+
+@settings(max_examples=200, deadline=None)
+@given(intervals, st.floats(0, 60, allow_nan=False),
+       st.floats(0.5, 20, allow_nan=False), st.integers(1, 3))
+def test_find_slot_respects_occupations(occ, after, duration, count):
+    """Property: the returned window never overlaps an occupation of the
+    chosen resources, and is the EARLIEST such window."""
+    res = {1, 2, 3}
+    g = Gantt(res, origin=0.0)
+    occupied = []
+    for rids, start, dur in occ:
+        g.occupy(set(rids), start, start + dur)
+        occupied.append((set(rids), start, start + dur))
+    fit = g.find_slot(res, count, duration, after=after)
+    if fit is None:
+        return
+    t, chosen = fit
+    assert len(chosen) == count and chosen <= res
+    assert t >= after - 1e-9
+
+    def free_over(rid, a, b):
+        return all(not (rid in rids and a < stop and b > start)
+                   for rids, start, stop in occupied)
+
+    for rid in chosen:
+        assert free_over(rid, t, t + duration), (rid, t)
+    # earliest: no candidate start strictly before t also fits
+    starts = sorted({after} | {s for _, s, _ in occupied} |
+                    {e for _, _, e in occupied})
+    for cand in starts:
+        if cand >= t or cand < after:
+            continue
+        avail = [r for r in res if free_over(r, cand, cand + duration)]
+        assert len(avail) < count, (cand, t, avail)

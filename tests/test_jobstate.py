@@ -1,0 +1,70 @@
+"""Figure 1 state machine: exhaustive legal/illegal transition checks plus a
+hypothesis property — no random walk can ever reach an illegal state."""
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import connect, jobstate
+from repro.core.api import add_resources, oarsub
+
+
+ALL = jobstate.ALL_STATES
+
+
+def _job(db):
+    add_resources(db, ["h0"])
+    return oarsub(db, "x")
+
+
+def test_happy_path():
+    db = connect()
+    jid = _job(db)
+    for s in (jobstate.TO_LAUNCH, jobstate.LAUNCHING, jobstate.RUNNING,
+              jobstate.TERMINATED):
+        jobstate.set_state(db, jid, s, now=1.0)
+    assert jobstate.get_state(db, jid) == "Terminated"
+    row = db.query_one("SELECT startTime, stopTime FROM jobs WHERE idJob=?", (jid,))
+    assert row["startTime"] == 1.0 and row["stopTime"] == 1.0
+
+
+def test_hold_resume():
+    db = connect()
+    jid = _job(db)
+    jobstate.set_state(db, jid, jobstate.HOLD)
+    jobstate.set_state(db, jid, jobstate.WAITING)
+    assert jobstate.get_state(db, jid) == "Waiting"
+
+
+def test_illegal_transitions_raise():
+    db = connect()
+    jid = _job(db)
+    with pytest.raises(jobstate.IllegalTransition):
+        jobstate.set_state(db, jid, jobstate.RUNNING)     # Waiting -> Running
+    with pytest.raises(jobstate.IllegalTransition):
+        jobstate.set_state(db, jid, jobstate.TERMINATED)  # Waiting -> Terminated
+
+
+def test_error_path_from_every_live_state():
+    for src in jobstate.LIVE_STATES:
+        assert jobstate.TO_ERROR in jobstate.TRANSITIONS[src] or \
+            src == jobstate.TO_ERROR
+
+
+def test_final_states_are_absorbing():
+    for s in jobstate.FINAL_STATES:
+        assert not jobstate.TRANSITIONS[s]
+
+
+@given(st.lists(st.sampled_from(ALL), min_size=1, max_size=30))
+def test_random_walks_never_corrupt(path):
+    """Property: applying arbitrary transition requests (accepting the legal
+    ones, rejecting the rest) always leaves the job in a reachable state of
+    fig. 1."""
+    state = jobstate.WAITING
+    for target in path:
+        if target in jobstate.TRANSITIONS[state]:
+            state = target
+        else:
+            with pytest.raises(jobstate.IllegalTransition):
+                jobstate.check_transition(state, target)
+    assert state in ALL

@@ -1,0 +1,111 @@
+"""Taktuk launcher (tree deploy, work stealing, failure detection) and the
+central module (notification coalescing, periodic redundancy, recovery)."""
+
+import itertools
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CentralModule, Executor, MetaScheduler, SimTransport,
+                        TaktukLauncher, api, connect)
+from repro.core.launcher import DeploymentReport
+
+
+# ------------------------------------------------------------------ launcher
+def test_deploy_reaches_all():
+    hosts = [f"h{i}" for i in range(100)]
+    rep = TaktukLauncher(SimTransport(latency=0.01)).deploy(hosts)
+    assert sorted(rep.reached) == sorted(hosts)
+    assert not rep.failed
+
+
+def test_deploy_makespan_is_logarithmic_not_linear():
+    lat = 0.01
+    t64 = TaktukLauncher(SimTransport(latency=lat)).deploy(
+        [f"h{i}" for i in range(64)]).virtual_time
+    t512 = TaktukLauncher(SimTransport(latency=lat)).deploy(
+        [f"h{i}" for i in range(512)]).virtual_time
+    assert t512 < 64 * lat * 8          # far from linear (sequential = 5.12s)
+    assert t512 / t64 < 3.0             # ~log growth
+
+
+def test_failed_hosts_detected_and_routed_around():
+    hosts = [f"h{i}" for i in range(50)]
+    tr = SimTransport(latency=0.01, connect_timeout=0.5,
+                      failed_hosts={"h7", "h23", "h42"})
+    rep = TaktukLauncher(tr).deploy(hosts)
+    assert sorted(rep.failed) == ["h23", "h42", "h7"]
+    assert len(rep.reached) == 47       # everyone else still reached
+
+
+def test_work_stealing_balances_stragglers():
+    hosts = [f"h{i}" for i in range(64)]
+    tr = SimTransport(latency=0.01, slow_hosts={"h1": 0.5})
+    rep = TaktukLauncher(tr).deploy(hosts)
+    assert sorted(rep.reached) == sorted(hosts)
+    assert rep.steals > 0               # someone stole the slow subtree's work
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 200), st.sets(st.integers(0, 199), max_size=20))
+def test_deploy_partition_property(n, failed_idx):
+    """Property: reached ∪ failed == hosts, disjoint, regardless of failures."""
+    hosts = [f"h{i}" for i in range(n)]
+    failed = {f"h{i}" for i in failed_idx if i < n}
+    rep = TaktukLauncher(SimTransport(failed_hosts=failed)).deploy(hosts)
+    assert set(rep.reached) | set(rep.failed) == set(hosts)
+    assert set(rep.reached).isdisjoint(rep.failed)
+    assert set(rep.failed) == failed
+
+
+# ------------------------------------------------------------------- central
+def _stack(clock=None):
+    db = connect()
+    api.add_resources(db, [f"h{i}" for i in range(4)])
+    kw = {"clock": clock} if clock else {}
+    central = CentralModule(
+        db, scheduler=MetaScheduler(db, **kw),
+        executor=Executor(db, check_nodes=False, **kw), **kw)
+    return db, central
+
+
+def test_notification_coalescing():
+    db, central = _stack()
+    central.tick()                      # drain initial pending
+    before = central.stats["discarded"]
+    for _ in range(10):
+        db.notify("submission")         # redundant while not ticked
+    assert central.stats["discarded"] >= before + 9
+
+
+def test_periodic_redundancy_schedules_without_notification():
+    """Lost notifications don't wedge: a job inserted behind the system's
+    back (by-hand DB edit, §2.2) is picked up by the periodic pass."""
+    t = {"now": 0.0}
+    db, central = _stack(clock=lambda: t["now"])
+    central.tick()
+    with db.transaction() as cur:       # by-hand insert, NO notification
+        cur.execute("INSERT INTO jobs(state, nbNodes, weight, command,"
+                    " queueName, maxTime, submissionTime) "
+                    "VALUES ('Waiting',1,1,'x','default',60,0)")
+    central._pending.clear()            # simulate the lost notification
+    t["now"] = 31.0                     # past the scheduler period
+    central.tick()
+    assert db.scalar("SELECT state FROM jobs") in ("Running", "Launching")
+
+
+def test_central_restart_resumes_from_db():
+    """Kill the central module mid-flight; a NEW one against the same DB
+    finishes the work (the control plane itself is stateless)."""
+    db = connect()
+    api.add_resources(db, ["h0"])
+    api.oarsub(db, "x", max_time=60)
+    # first central module schedules but "crashes" before launching
+    sched = MetaScheduler(db)
+    sched.run()
+    assert db.scalar("SELECT state FROM jobs") == "toLaunch"
+    # new instance picks it up purely from the DB
+    db2 = db                             # same store (in-memory handle)
+    central2 = CentralModule(db2, scheduler=MetaScheduler(db2),
+                             executor=Executor(db2, check_nodes=False))
+    central2.tick()
+    assert db2.scalar("SELECT state FROM jobs") == "Running"

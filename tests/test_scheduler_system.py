@@ -1,0 +1,152 @@
+"""End-to-end control-plane behaviour through the simulator: submission →
+scheduling → execution → termination, reservations, matching, queues,
+preemption, failures, elasticity. Each test is a scenario from the paper."""
+
+from repro.core import ClusterSimulator, api
+
+
+def states(sim):
+    return {r.idJob: r for r in sorted(sim.records.values(),
+                                       key=lambda x: x.idJob)}
+
+
+def test_simple_fifo_execution():
+    sim = ClusterSimulator(n_nodes=4, weight=2)
+    sim.submit(0.0, duration=10, nb_nodes=1)
+    sim.submit(0.0, duration=10, nb_nodes=1)
+    sim.submit(0.0, duration=5, nb_nodes=4)
+    sim.submit(1.0, duration=3, nb_nodes=1)
+    recs = sim.run()
+    st = {r.idJob: r for r in recs}
+    assert all(r.state == "Terminated" for r in recs)
+    assert st[3].start == 10.0           # wide job waits for 1,2
+    assert st[4].start == 1.0            # narrow job backfills
+
+
+def test_reservation_exact_slot():
+    sim = ClusterSimulator(n_nodes=4, weight=2)
+    sim.submit(0.0, duration=100, nb_nodes=2)
+    sim.submit(0.0, duration=5, nb_nodes=2, reservation_start=20.0)
+    recs = sim.run()
+    st = {r.idJob: r for r in recs}
+    assert st[2].start == 20.0 and st[2].stop == 25.0
+
+
+def test_reservation_conflict_rejected():
+    sim = ClusterSimulator(n_nodes=2, weight=1)
+    sim.submit(0.0, duration=100, nb_nodes=2, max_time=100)
+    sim.submit(1.0, duration=5, nb_nodes=2, reservation_start=50.0)
+    recs = sim.run()
+    st = {r.idJob: r for r in recs}
+    assert st[2].state == "Error"        # slot unavailable -> toError path
+
+
+def test_resource_matching_properties():
+    sim = ClusterSimulator(n_nodes=4, weight=2, pods=2)
+    # pod-constrained job: only pod-1 hosts match
+    sim.submit(0.0, duration=5, nb_nodes=2, properties="pod = 1")
+    recs = sim.run()
+    assert recs[0].state == "Terminated"
+    rows = sim.db.query(
+        "SELECT r.pod FROM assignments a JOIN resources r "
+        "ON r.idResource=a.idResource")  # assignments cleared on completion
+    hosts = sim.db.query(
+        "SELECT message FROM event_log WHERE level='error'")
+    assert not hosts
+
+
+def test_bad_properties_rejected():
+    sim = ClusterSimulator(n_nodes=2, weight=1)
+    sim.submit(0.0, duration=5, nb_nodes=1, properties="mem_gb >= 9999")
+    recs = sim.run(until=100)
+    # matches nothing -> job can never be placed; stays Waiting (not crash)
+    assert recs[0].state in ("Waiting", "Error")
+
+
+def test_queue_priorities():
+    sim = ClusterSimulator(n_nodes=1, weight=1)
+    sim.submit(0.0, duration=10, nb_nodes=1, queue="default")
+    sim.submit(0.0, duration=10, nb_nodes=1, queue="interactive")
+    recs = sim.run()
+    st = {r.idJob: r for r in recs}
+    # interactive queue has higher priority -> job 2 runs first
+    assert st[2].start == 0.0 and st[1].start == 10.0
+
+
+def test_besteffort_preemption_and_resubmission():
+    sim = ClusterSimulator(n_nodes=4, weight=2)
+    sim.submit(0.0, duration=1000, nb_nodes=4, queue="besteffort",
+               max_time=2000)
+    sim.submit(5.0, duration=10, nb_nodes=4, max_time=20)
+    recs = sim.run(until=5000)
+    st = {r.idJob: r for r in recs}
+    assert st[1].state == "Error" and "preempted" in \
+        sim.db.scalar("SELECT message FROM jobs WHERE idJob=1")
+    assert st[2].start == 5.0            # regular job got the resources
+    assert st[3].state == "Terminated"   # resubmitted clone finished
+    assert st[3].start >= st[2].stop
+
+
+def test_node_failure_fails_job_and_marks_node():
+    sim = ClusterSimulator(n_nodes=4, weight=2)
+    sim.submit(0.0, duration=50, nb_nodes=4, max_time=100)
+    sim.fail_node(10.0, "pod0-host2")
+    recs = sim.run(until=200)
+    assert recs[0].state == "Error"
+    nodes = {n["hostname"]: n["state"] for n in api.oarnodes(sim.db)}
+    assert nodes["pod0-host2"] == "Suspected"
+
+
+def test_failed_node_excluded_then_elastic_regrow():
+    sim = ClusterSimulator(n_nodes=2, weight=1)
+    sim.fail_node(0.0, "pod0-host1")
+    sim.submit(1.0, duration=5, nb_nodes=2, max_time=10)   # needs 2 nodes
+    sim.add_nodes(20.0, ["newhost"], weight=1)             # elastic scale-up
+    recs = sim.run(until=100)
+    # job can only run once the new node joined
+    assert recs[0].state == "Terminated"
+    assert recs[0].start >= 20.0
+
+
+def test_walltime_enforcement():
+    sim = ClusterSimulator(n_nodes=1, weight=1)
+    sim.submit(0.0, duration=100, nb_nodes=1, max_time=10)
+    recs = sim.run(until=500)
+    assert recs[0].state == "Error"
+    assert "walltime" in sim.db.scalar("SELECT message FROM jobs WHERE idJob=1")
+
+
+def test_oardel_cancels():
+    sim = ClusterSimulator(n_nodes=1, weight=1)
+    sim.submit(0.0, duration=100, nb_nodes=1, max_time=200)
+    sim._push(5.0, "tick")
+
+    orig = sim._on_tick
+    def cancel_then_tick(p):
+        api.oardel(sim.db, 1)
+        orig(p)
+    sim._on_tick = cancel_then_tick
+    recs = sim.run(until=300)
+    assert recs[0].state == "Error"
+
+
+def test_hold_and_resume():
+    sim = ClusterSimulator(n_nodes=1, weight=1)
+    db = sim.db
+    jid = api.oarsub(db, "x", nb_nodes=1, max_time=10, clock=lambda: 0.0)
+    api.oarhold(db, jid)
+    sim.central.tick()
+    assert db.scalar("SELECT state FROM jobs WHERE idJob=?", (jid,)) == "Hold"
+    api.oarresume(db, jid)
+    sim.central.tick()
+    assert db.scalar("SELECT state FROM jobs WHERE idJob=?", (jid,)) in \
+        ("toLaunch", "Launching", "Running")
+
+
+def test_esp_multimode_reservations_honoured():
+    """Multimode ESP slice: staggered arrivals + an exact-slot Z
+    reservation that the scheduler must drain for."""
+    from benchmarks.esp2 import run_esp_multimode
+    r = run_esp_multimode("fifo_backfill", procs=8, seed=2)
+    assert r.n_jobs == 230
+    assert 0.3 < r.efficiency <= 1.0
