@@ -78,20 +78,37 @@ def run_burst(n_jobs: int, *, n_nodes: int = 17, weight: int = 2,
         wall, n_jobs / wall, nq, nq / n_jobs)
 
 
-def run(sizes=(10, 50, 100, 200, 500, 1000)) -> list[BurstResult]:
+SIZES = (10, 50, 100, 200, 500, 1000)
+SMOKE_SIZES = (10, 50, 100)  # tier-1 time budget
+
+
+def run(sizes=SIZES) -> list[BurstResult]:
     return [run_burst(n) for n in sizes]
 
 
-def main() -> None:
-    print("# submissions burst (fig. 9): tiny jobs, real wall-clock, 17×2 procs")
+def main(argv: list[str] | None = None, *, smoke: bool = False) -> list[BurstResult]:
+    args = list(argv or [])
+    smoke = smoke or "--smoke" in args
+    print("# submissions burst (fig. 9): tiny jobs, real wall-clock, 17×2 procs"
+          + (" [smoke]" if smoke else ""))
     print(f"{'N':>5s} {'mean_resp_s':>12s} {'p95_s':>8s} {'jobs/s':>8s} "
           f"{'SQL/job':>8s}")
-    for r in run():
+    results = run(SMOKE_SIZES if smoke else SIZES)
+    for r in results:
         print(f"{r.n_jobs:5d} {r.mean_response_s:12.3f} {r.p95_response_s:8.3f} "
               f"{r.jobs_per_s:8.1f} {r.sql_per_job:8.1f}")
     print("paper: stable to 1000 simultaneous submissions; ~35 SQL "
           "queries/job; DB far from saturation")
+    # deferred so direct-script runs can fix sys.path in __main__ first
+    from benchmarks.record import write_bench_sched
+    write_bench_sched(burst_results=results, smoke=smoke)
+    return results
 
 
 if __name__ == "__main__":
-    main()
+    import os
+    import sys
+    # direct-script runs (python benchmarks/burst.py) lack the repo root on
+    # sys.path, which the benchmarks.record import inside main() needs
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    main(sys.argv[1:])

@@ -1,0 +1,66 @@
+"""BENCH_sched.json recorder — leaf module, imported by every suite.
+
+The scheduler-perf suites (scale, burst) record pass wall time and SQL
+queries per pass here, merged section-by-section so suites (and smoke runs)
+never clobber each other's records, with speedups computed against a frozen
+seed baseline so regressions stay visible across PRs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+__all__ = ["BENCH_PATH", "SEED_BASELINE", "write_bench_sched"]
+
+BENCH_PATH = os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                          "BENCH_sched.json")
+
+# Seed-tree numbers for the headline configuration (10k nodes, 500-job
+# backlog; one full meta-scheduler pass), measured on the reference container
+# before the bitset-Gantt/PassCache rewrite. Frozen so every future run of
+# this harness reports its speedup against the same origin.
+SEED_BASELINE = {"nodes": 10000, "backlog": 500,
+                 "pass_wall_s": 36.84, "sql_per_pass": 511.0}
+
+
+def write_bench_sched(path: str = BENCH_PATH, *, scale_results=None,
+                      burst_results=None, smoke: bool | None = None) -> dict:
+    """Merge suite results into BENCH_sched.json (section per suite, so
+    scale and burst can each emit independently without clobbering)."""
+    payload: dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as fh:
+                payload = json.load(fh)
+        except (OSError, ValueError):
+            payload = {}
+        if not isinstance(payload, dict):  # valid JSON but not an object
+            payload = {}
+    payload["generated_by"] = "benchmarks/run.py"
+    payload["seed_baseline"] = SEED_BASELINE
+    smoke = bool(smoke)  # smoke runs land in *_smoke sections so a quick CI
+    if scale_results is not None:  # run never clobbers the full-scale record
+        payload["scale_smoke" if smoke else "scale"] = \
+            [dataclasses.asdict(r) for r in scale_results]
+        head = [r for r in scale_results
+                if r.nodes == SEED_BASELINE["nodes"]
+                and r.backlog == SEED_BASELINE["backlog"]]
+        if head and not smoke:
+            r = head[0]
+            payload["speedup_vs_seed"] = {
+                "pass_wall": round(SEED_BASELINE["pass_wall_s"] / r.schedule_pass_s, 2)
+                if r.schedule_pass_s else None,
+                "sql_per_pass": round(SEED_BASELINE["sql_per_pass"] / r.sql_per_pass, 2)
+                if r.sql_per_pass else None,
+            }
+    if burst_results is not None:
+        payload["burst_smoke" if smoke else "burst"] = \
+            [dataclasses.asdict(r) for r in burst_results]
+    tmp = path + ".tmp"
+    with open(tmp, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    os.replace(tmp, path)  # atomic: a crash mid-dump can't truncate the record
+    return payload

@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python -m benchmarks.run            # all suites
     PYTHONPATH=src python -m benchmarks.run esp2 burst # a subset
+    PYTHONPATH=src python -m benchmarks.run --smoke scale  # tier-1-budget run
 
 Suites:
   complexity     table 1  — software complexity (files / lines per subsystem)
@@ -10,6 +11,11 @@ Suites:
   burst          fig 9   — submission-burst response time + SQL query rate
   parallel_jobs  fig 10  — parallel launch cost vs node count × launcher mode
   scale          beyond-paper — meta-scheduler pass time up to 10k nodes
+
+The scheduler-perf suites (scale, burst) additionally record their numbers
+in ``BENCH_sched.json`` (pass wall time, SQL queries per pass, speedup vs
+the frozen seed baseline) so regressions are visible across PRs. ``--smoke``
+shrinks them (1k nodes; small bursts) to fit the tier-1 time budget.
 """
 
 from __future__ import annotations
@@ -46,9 +52,13 @@ def run_features() -> None:
 
 
 def main(argv: list[str] | None = None) -> None:
-    args = (argv if argv is not None else sys.argv[1:]) or SUITES
+    args = list(argv if argv is not None else sys.argv[1:])
+    smoke = "--smoke" in args
+    if smoke:
+        args.remove("--smoke")
+    suites = args or SUITES
     t0 = time.perf_counter()
-    for suite in args:
+    for suite in suites:
         if suite not in SUITES:
             raise SystemExit(f"unknown suite {suite!r}; have {SUITES}")
         print(f"\n=== {suite} {'=' * (60 - len(suite))}")
@@ -60,11 +70,11 @@ def main(argv: list[str] | None = None) -> None:
         elif suite == "esp2":
             esp2.main()
         elif suite == "burst":
-            burst.main()
+            burst.main(smoke=smoke)
         elif suite == "parallel_jobs":
             parallel_jobs.main()
         elif suite == "scale":
-            scale.main()
+            scale.main(smoke=smoke)
         print(f"--- {suite} done in {time.perf_counter() - t:.1f}s")
     print(f"\nall suites done in {time.perf_counter() - t0:.1f}s")
 

@@ -10,6 +10,7 @@ period)."""
 from __future__ import annotations
 
 import random
+import sys
 import time
 from dataclasses import dataclass
 
@@ -55,19 +56,34 @@ def run_one(n_nodes: int, backlog: int = 500, *, seed: int = 0) -> ScaleResult:
                        sql / 1.0)
 
 
-def run(sizes=(100, 1000, 4096, 10000)) -> list[ScaleResult]:
+SIZES = (100, 1000, 4096, 10000)
+SMOKE_SIZES = (1000,)  # tier-1 time budget: one fast point, same backlog
+
+
+def run(sizes=SIZES) -> list[ScaleResult]:
     return [run_one(n) for n in sizes]
 
 
-def main() -> None:
+def main(argv: list[str] | None = None, *, smoke: bool = False) -> list[ScaleResult]:
+    args = list(argv or [])
+    smoke = smoke or "--smoke" in args
     print("# control-plane scale (beyond paper): one scheduling pass, "
-          "500-job backlog")
+          "500-job backlog" + (" [smoke]" if smoke else ""))
     print(f"{'nodes':>6s} {'sched_pass_s':>13s} {'SQL/pass':>9s} "
           f"{'taktuk_model_s':>15s} {'taktuk_wall_s':>14s}")
-    for r in run():
+    results = run(SMOKE_SIZES if smoke else SIZES)
+    for r in results:
         print(f"{r.nodes:6d} {r.schedule_pass_s:13.3f} {r.sql_per_pass:9.0f} "
               f"{r.monitor_sweep_modelled_s:15.3f} {r.monitor_sweep_wall_s:14.3f}")
+    # deferred so direct-script runs can fix sys.path in __main__ first
+    from benchmarks.record import write_bench_sched
+    write_bench_sched(scale_results=results, smoke=smoke)
+    return results
 
 
 if __name__ == "__main__":
-    main()
+    import os
+    # direct-script runs (python benchmarks/scale.py) lack the repo root on
+    # sys.path, which the benchmarks.record import inside main() needs
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    main(sys.argv[1:])

@@ -50,6 +50,7 @@ class Database:
             self._conn.execute("PRAGMA journal_mode=WAL")
             self._conn.execute("PRAGMA synchronous=NORMAL")
         self._notify_hooks: list[Callable[[str], None]] = []
+        self._txn_depth = 0           # open transaction() contexts (nesting)
         self.query_count = 0          # §3.2.2: SQL load accounting
 
     # ------------------------------------------------------------------ DDL
@@ -68,40 +69,70 @@ class Database:
 
         The paper's robustness contract: every module change is atomic and
         leaves the system coherent; the engine handles safety. Nested use
-        joins the outer transaction (sqlite savepoints are overkill here —
-        modules are small, per the design).
+        joins the outer transaction via a savepoint, so an inner failure
+        rolls back only the inner writes — the outer unit stays intact and
+        decides its own fate (a bare inner rollback would silently discard
+        the outer context's earlier writes and then let it commit a partial
+        unit).
         """
         with self._lock:
             cur = self._conn.cursor()
-            in_txn = self._conn.in_transaction
+            depth = self._txn_depth
+            sp = f"sp_txn_{depth}" if depth else None
+            try:
+                if sp:
+                    cur.execute(f"SAVEPOINT {sp}")
+                elif not self._conn.in_transaction:
+                    # sqlite3 only implicitly BEGINs before DML; start the
+                    # unit explicitly so a nested SAVEPOINT opened before our
+                    # first write rides inside it (its RELEASE must not
+                    # commit)
+                    cur.execute("BEGIN")
+            except BaseException:
+                cur.close()  # setup failed: depth untouched, handle usable
+                raise
+            self._txn_depth += 1
             try:
                 yield cur
-                if not in_txn or not self._conn.in_transaction:
-                    self._conn.commit()
-                elif not in_txn:
-                    self._conn.commit()
+            except BaseException:  # incl. KeyboardInterrupt: never leave the
+                if sp:             # unit open for a later commit to flush
+                    # skip when sqlite already auto-rolled-back the whole
+                    # transaction (disk full, ON CONFLICT ROLLBACK): the
+                    # savepoint is gone and ROLLBACK TO would raise, masking
+                    # the original error
+                    if self._conn.in_transaction:
+                        cur.execute(f"ROLLBACK TO {sp}")
+                        cur.execute(f"RELEASE {sp}")
                 else:
-                    pass  # outer transaction will commit
-            except Exception:
-                self._conn.rollback()
+                    self._conn.rollback()
                 raise
+            else:
+                if sp:
+                    cur.execute(f"RELEASE {sp}")
+                else:
+                    self._conn.commit()  # outermost context commits the unit
             finally:
+                self._txn_depth -= 1
                 cur.close()
 
     def execute(self, sql: str, params: Sequence[Any] | dict = ()) -> sqlite3.Cursor:
+        """One-off statement: autocommits, unless a :meth:`transaction` is
+        open on this handle — then it joins that atomic unit and the
+        outermost context commits (a mid-transaction commit here would break
+        the atomic-modification contract recovery relies on)."""
         with self._lock:
             self.query_count += 1
             cur = self._conn.execute(sql, params)
-            if not self._conn.in_transaction:
-                pass
-            else:
+            if self._txn_depth == 0 and self._conn.in_transaction:
                 self._conn.commit()
             return cur
 
     def executemany(self, sql: str, seq: Iterable[Sequence[Any]]) -> None:
         with self._lock:
+            self.query_count += 1
             self._conn.executemany(sql, seq)
-            self._conn.commit()
+            if self._txn_depth == 0:
+                self._conn.commit()
 
     def query(self, sql: str, params: Sequence[Any] | dict = ()) -> list[sqlite3.Row]:
         with self._lock:
@@ -135,7 +166,8 @@ class Database:
                 "INSERT INTO event_log(ts, module, level, job_id, message) VALUES (?,?,?,?,?)",
                 (clock(), module, level, job_id, message),
             )
-            self._conn.commit()
+            if self._txn_depth == 0:
+                self._conn.commit()
 
     # ------------------------------------------------------------- lifecycle
     def close(self) -> None:
@@ -165,4 +197,10 @@ def connect(path: str = ":memory:", *, fresh: bool = False) -> Database:
     have = db.scalar("SELECT COUNT(*) FROM sqlite_master WHERE type='table' AND name='jobs'")
     if not have:
         db.create_schema()
+    else:
+        # the DDL is IF NOT EXISTS throughout: re-applying indexes on reopen
+        # upgrades databases created before an index was added
+        with db.transaction() as cur:
+            for ddl in schema.ALL_INDEXES:
+                cur.execute(ddl)
     return db

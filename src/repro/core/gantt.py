@@ -1,97 +1,175 @@
-"""Gantt diagram of resource availability — §2.3.
+"""Gantt diagram of resource availability — §2.3, bitmask edition.
 
 "This module maintains an internal representation of the available
 ressources similar to a Gantt diagram and updates this diagram by removing
 time slots already reserved. Initially, the only occupied time slots are the
 ones on which some job is executing and the ones that have been reserved."
 
-The representation is a sorted list of time slots; each slot carries the set
-of free resource ids over its interval. Scheduling a job first-fit means
-scanning candidate start boundaries and intersecting free sets over the
-walltime window. This keeps conservative backfilling natural: every queued
-job gets a definite slot, so no job can starve (the paper's no-famine
-default), while idle windows in front of wide jobs are offered to later
-narrow jobs.
+The representation is a sorted list of time slots; each slot carries the
+resources free over its interval. Scheduling a job first-fit means scanning
+candidate start boundaries and intersecting free sets over the walltime
+window. This keeps conservative backfilling natural: every queued job gets a
+definite slot, so no job can starve (the paper's no-famine default), while
+idle windows in front of wide jobs are offered to later narrow jobs.
+
+Representation (§3.2.2 scaling): each ``Slot.free`` is a Python ``int``
+bitmask over a :class:`~repro.core.resourceindex.ResourceIndex` (bit i ↔ the
+i-th alive resource id in ascending order), so occupy/release are one big-int
+``&=``/``|=`` per covered slot and "how many candidates fit" is
+``(mask).bit_count()`` — contiguous words instead of 10k-element hash sets.
+Slot start times are mirrored in the maintained sorted array ``_starts``
+(updated on every split) so boundary lookups are a ``bisect`` with no
+per-call list rebuild. ``find_slot`` is a single left-to-right sweep: the
+window intersection over [t, t+duration) is maintained incrementally with a
+sliding-window AND (two-stack aggregation, amortised O(1) big-int ops per
+slot pushed/popped) instead of recomputing the intersection from scratch for
+every candidate start — earliest-fit drops from O(boundaries × slots) to
+O(slots) big-int ops per job.
+
+The set-based seed implementation is retained as
+:class:`repro.core.gantt_ref.ReferenceGantt`; differential tests assert this
+module matches it operation-for-operation.
 """
 
 from __future__ import annotations
 
 import bisect
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
+
+from repro.core.resourceindex import ResourceIndex
 
 INF = math.inf
 
-__all__ = ["Gantt", "Slot"]
+# Timeline comparison epsilon, shared by every module that compares virtual
+# times (policies, meta-scheduler, simulator) — single definition here, the
+# module all of them already depend on.
+EPS = 1e-9
+
+__all__ = ["Gantt", "Slot", "ResourceIndex", "EPS"]
 
 
 @dataclass
 class Slot:
     start: float
     stop: float
-    free: set[int] = field(default_factory=set)
+    free: int = 0  # bitmask over the owning Gantt's ResourceIndex
 
     def __repr__(self):  # pragma: no cover - debug aid
         stop = "inf" if self.stop == INF else f"{self.stop:.1f}"
-        return f"Slot[{self.start:.1f},{stop}) free={len(self.free)}"
+        return f"Slot[{self.start:.1f},{stop}) free={self.free.bit_count()}"
+
+
+class _SlidingAnd:
+    """Sliding-window AND over a FIFO of bitmasks (two-stack aggregation).
+
+    ``push`` appends on the right, ``pop`` removes from the left, ``value``
+    is the AND of everything currently inside — each element is moved between
+    the stacks at most once, so a full sweep costs O(n) big-int ANDs total.
+    """
+
+    __slots__ = ("_identity", "_in", "_in_agg", "_out")
+
+    def __init__(self, identity: int):
+        self._identity = identity
+        self._in: list[int] = []       # right stack: raw pushed values
+        self._in_agg = identity        # AND of the right stack
+        self._out: list[int] = []      # left stack: suffix aggregates
+
+    def push(self, v: int) -> None:
+        self._in.append(v)
+        self._in_agg &= v
+
+    def pop(self) -> None:
+        if not self._out:
+            agg = self._identity
+            out = self._out
+            in_ = self._in
+            while in_:
+                agg &= in_.pop()
+                out.append(agg)
+            self._in_agg = self._identity
+        self._out.pop()
+
+    def value(self) -> int:
+        out = self._out
+        return (out[-1] if out else self._identity) & self._in_agg
 
 
 class Gantt:
-    """Availability timeline over a fixed resource set, from ``origin``."""
+    """Availability timeline over a fixed resource set, from ``origin``.
 
-    def __init__(self, resources: set[int], origin: float):
+    Mutation and query methods accept resource collections either as
+    ``set[int]`` of resource ids (converted through :attr:`index`) or as an
+    ``int`` bitmask; the mask form is the hot path used by the policies.
+    """
+
+    def __init__(self, resources, origin: float):
         self.origin = float(origin)
-        self.all_resources = set(resources)
-        self.slots: list[Slot] = [Slot(self.origin, INF, set(resources))]
+        self.index = ResourceIndex(resources)
+        self.all_mask = self.index.full_mask
+        self.slots: list[Slot] = [Slot(self.origin, INF, self.all_mask)]
+        self._starts: list[float] = [self.origin]  # mirror of slot starts
+
+    @property
+    def all_resources(self) -> set[int]:
+        return set(self.index.rids)
 
     # ------------------------------------------------------------ mutation
     def _boundary(self, t: float) -> None:
         """Ensure ``t`` is a slot boundary (split the covering slot)."""
         if t <= self.origin or t == INF:
             return
-        starts = [s.start for s in self.slots]
-        i = bisect.bisect_right(starts, t) - 1
+        i = bisect.bisect_right(self._starts, t) - 1
         s = self.slots[i]
         if s.start == t or s.stop <= t:
             return
-        self.slots[i] = Slot(s.start, t, set(s.free))
-        self.slots.insert(i + 1, Slot(t, s.stop, set(s.free)))
+        self.slots[i] = Slot(s.start, t, s.free)
+        self.slots.insert(i + 1, Slot(t, s.stop, s.free))
+        self._starts.insert(i + 1, t)
 
-    def occupy(self, rids: set[int], start: float, stop: float) -> None:
-        """Remove ``rids`` from the free sets over [start, stop)."""
+    def occupy(self, rids, start: float, stop: float) -> None:
+        """Remove ``rids`` (set or bitmask) from the free masks over [start, stop)."""
+        mask = self.index.mask_of(rids)
         start = max(start, self.origin)
         if stop <= start:
             return
         self._boundary(start)
         self._boundary(stop)
-        for s in self.slots:
+        inv = ~mask
+        slots = self.slots
+        for k in range(bisect.bisect_left(self._starts, start), len(slots)):
+            s = slots[k]
             if s.start >= stop:
                 break
-            if s.stop > start and s.start >= start:
-                s.free -= rids
+            s.free &= inv
 
-    def release(self, rids: set[int], start: float, stop: float) -> None:
+    def release(self, rids, start: float, stop: float) -> None:
         """Re-add ``rids`` over [start, stop) (used by preemption re-planning)."""
+        mask = self.index.mask_of(rids)
         start = max(start, self.origin)
         self._boundary(start)
         self._boundary(stop)
-        for s in self.slots:
+        slots = self.slots
+        for k in range(bisect.bisect_left(self._starts, start), len(slots)):
+            s = slots[k]
             if s.start >= stop:
                 break
-            if s.start >= start:
-                s.free |= rids & self.all_resources
+            s.free |= mask
 
     # ------------------------------------------------------------- queries
-    def free_at(self, t: float) -> set[int]:
-        starts = [s.start for s in self.slots]
-        i = bisect.bisect_right(starts, t) - 1
+    def free_mask_at(self, t: float) -> int:
+        i = bisect.bisect_right(self._starts, t) - 1
         if i < 0:
-            return set()
-        return set(self.slots[i].free)
+            return 0
+        return self.slots[i].free
+
+    def free_at(self, t: float) -> set[int]:
+        return self.index.set_of(self.free_mask_at(t))
 
     def find_slot(
         self,
-        candidates: set[int],
+        candidates,
         count: int,
         duration: float,
         after: float | None = None,
@@ -104,30 +182,73 @@ class Gantt:
         ``exact_start`` pins the start (reservations, §2.3: the user asks for
         a specific time slot — it either fits there or nowhere).
         ``prefer`` orders the chosen resources (e.g. pod-contiguity).
-        Returns ``(start, chosen_resource_ids)`` or ``None``.
+        Returns ``(start, chosen_resource_ids)`` or ``None``. Set-based
+        wrapper over :meth:`find_slot_mask`.
         """
+        prefer_bits = self.index.bits_of(prefer) if prefer else None
+        fit = self.find_slot_mask(self.index.mask_of(candidates), count,
+                                  duration, after, exact_start=exact_start,
+                                  prefer_bits=prefer_bits)
+        if fit is None:
+            return None
+        start, mask = fit
+        return start, self.index.set_of(mask)
+
+    def find_slot_mask(
+        self,
+        candidates: int,
+        count: int,
+        duration: float,
+        after: float | None = None,
+        *,
+        exact_start: float | None = None,
+        prefer_bits: list[int] | None = None,
+    ) -> tuple[float, int] | None:
+        """Mask-native earliest first-fit: ``candidates`` and the returned
+        chosen resources are bitmasks over :attr:`index`."""
         if count <= 0:
-            return (after if after is not None else self.origin, set())
+            return (after if after is not None else self.origin, 0)
         after = self.origin if after is None else max(after, self.origin)
+        if after == INF:
+            return None  # no finite start exists (reference: empty window)
         if exact_start is not None:
             avail = self._window_free(exact_start, exact_start + duration, candidates)
-            if len(avail) >= count:
-                return exact_start, self._choose(avail, count, prefer)
+            if avail.bit_count() >= count:
+                return exact_start, _choose_mask(avail, count, prefer_bits)
             return None
-        # candidate start times: `after` plus every slot boundary >= after
-        starts = {after}
-        starts.update(s.start for s in self.slots if s.start > after)
-        for t in sorted(starts):
-            avail = self._window_free(t, t + duration, candidates)
-            if len(avail) >= count:
-                return t, self._choose(avail, count, prefer)
+        # One sweep: candidate starts are `after` plus every later slot
+        # boundary; the window intersection slides right with them. The
+        # sliding AND holds exactly the slots [lo, j] (empty when j < lo).
+        slots = self.slots
+        n = len(slots)
+        i0 = bisect.bisect_right(self._starts, after) - 1  # after >= origin
+        win = _SlidingAnd(self.all_mask)
+        lo, j = i0, i0 - 1
+        for i in range(i0, n):
+            t = after if i == i0 else slots[i].start
+            end = t + duration
+            while j + 1 < n and slots[j + 1].start < end:
+                j += 1
+                win.push(slots[j].free)
+            while lo < i:
+                if lo <= j:
+                    win.pop()  # slot lo slid out of the window
+                lo += 1
+            if j < i:
+                continue  # degenerate window (duration <= 0): nothing covered
+            avail = candidates & win.value()
+            if avail.bit_count() >= count:
+                return t, _choose_mask(avail, count, prefer_bits)
         return None
 
-    def _window_free(self, start: float, stop: float, candidates: set[int]) -> set[int]:
-        """Resources from ``candidates`` free over the whole [start, stop)."""
-        avail = set(candidates)
+    def _window_free(self, start: float, stop: float, candidates: int) -> int:
+        """Mask of ``candidates`` free over the whole [start, stop)."""
+        avail = candidates & self.all_mask
+        slots = self.slots
         seen_any = False
-        for s in self.slots:
+        for k in range(max(bisect.bisect_right(self._starts, start) - 1, 0),
+                       len(slots)):
+            s = slots[k]
             if s.stop <= start:
                 continue
             if s.start >= stop:
@@ -136,13 +257,27 @@ class Gantt:
             avail &= s.free
             if not avail:
                 break
-        return avail if seen_any else set()
+        return avail if seen_any else 0
 
-    @staticmethod
-    def _choose(avail: set[int], count: int, prefer: list[int] | None) -> set[int]:
-        if prefer:
-            rank = {r: i for i, r in enumerate(prefer)}
-            ordered = sorted(avail, key=lambda r: (rank.get(r, len(rank)), r))
-        else:
-            ordered = sorted(avail)
-        return set(ordered[:count])
+
+def _choose_mask(avail: int, count: int, prefer_bits: list[int] | None) -> int:
+    """``count`` bits from ``avail``: preference order first, then ascending
+    bit position (== ascending resource id; matches the reference's
+    sort-by-(rank, rid) choice exactly)."""
+    chosen = 0
+    n = 0
+    if prefer_bits:
+        for b in prefer_bits:
+            bit = 1 << b
+            if avail & bit:
+                avail ^= bit  # clear, so a duplicate prefer entry can't recount
+                chosen |= bit
+                n += 1
+                if n >= count:
+                    return chosen
+    while n < count:
+        lsb = avail & -avail
+        chosen |= lsb
+        avail ^= lsb
+        n += 1
+    return chosen

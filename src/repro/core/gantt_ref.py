@@ -1,0 +1,179 @@
+"""Set-based reference Gantt — the executable specification.
+
+This is the seed implementation of :mod:`repro.core.gantt` (sets of resource
+ids per slot, per-call boundary rebuilds, O(boundaries × slots) earliest-fit),
+retained so the optimised bitset Gantt can be checked against it: the
+differential tests in ``tests/test_gantt_differential.py`` replay randomised
+occupy/release/find_slot sequences and full policy runs on both and assert
+identical results. One deliberate deviation from the seed: degenerate
+*duplicate* entries in ``prefer`` (which no real caller produces) are
+normalised to their first occurrence in both implementations — the seed's
+raw rank dict let a duplicated entry tie with non-preferred resources, a
+quirk not worth replicating in the mask path (see ``_choose``).
+
+It additionally exposes the bitmask-facing surface of the fast Gantt
+(``index``, ``find_slot_mask``, mask arguments to ``occupy``/``release``) by
+converting masks to sets at the boundary, so the *real* policy functions run
+unchanged on top of it. Do not use this class outside tests — it is the slow
+path by design.
+"""
+
+from __future__ import annotations
+
+import bisect
+import math
+from dataclasses import dataclass, field
+
+from repro.core.resourceindex import ResourceIndex
+
+INF = math.inf
+
+__all__ = ["ReferenceGantt", "RefSlot"]
+
+
+@dataclass
+class RefSlot:
+    start: float
+    stop: float
+    free: set[int] = field(default_factory=set)
+
+    def __repr__(self):  # pragma: no cover - debug aid
+        stop = "inf" if self.stop == INF else f"{self.stop:.1f}"
+        return f"RefSlot[{self.start:.1f},{stop}) free={len(self.free)}"
+
+
+class ReferenceGantt:
+    """Availability timeline over a fixed resource set, from ``origin``."""
+
+    def __init__(self, resources: set[int], origin: float):
+        self.origin = float(origin)
+        self.all_resources = set(resources)
+        self.index = ResourceIndex(resources)
+        self.slots: list[RefSlot] = [RefSlot(self.origin, INF, set(resources))]
+
+    # ------------------------------------------------------------ mutation
+    def _boundary(self, t: float) -> None:
+        """Ensure ``t`` is a slot boundary (split the covering slot)."""
+        if t <= self.origin or t == INF:
+            return
+        starts = [s.start for s in self.slots]
+        i = bisect.bisect_right(starts, t) - 1
+        s = self.slots[i]
+        if s.start == t or s.stop <= t:
+            return
+        self.slots[i] = RefSlot(s.start, t, set(s.free))
+        self.slots.insert(i + 1, RefSlot(t, s.stop, set(s.free)))
+
+    def _as_set(self, rids) -> set[int]:
+        return self.index.set_of(rids) if isinstance(rids, int) else set(rids)
+
+    def occupy(self, rids, start: float, stop: float) -> None:
+        """Remove ``rids`` (set or bitmask) from the free sets over [start, stop)."""
+        rids = self._as_set(rids)
+        start = max(start, self.origin)
+        if stop <= start:
+            return
+        self._boundary(start)
+        self._boundary(stop)
+        for s in self.slots:
+            if s.start >= stop:
+                break
+            if s.stop > start and s.start >= start:
+                s.free -= rids
+
+    def release(self, rids, start: float, stop: float) -> None:
+        """Re-add ``rids`` (set or bitmask) over [start, stop)."""
+        rids = self._as_set(rids)
+        start = max(start, self.origin)
+        self._boundary(start)
+        self._boundary(stop)
+        for s in self.slots:
+            if s.start >= stop:
+                break
+            if s.start >= start:
+                s.free |= rids & self.all_resources
+
+    # ------------------------------------------------------------- queries
+    def free_at(self, t: float) -> set[int]:
+        starts = [s.start for s in self.slots]
+        i = bisect.bisect_right(starts, t) - 1
+        if i < 0:
+            return set()
+        return set(self.slots[i].free)
+
+    def find_slot(
+        self,
+        candidates: set[int],
+        count: int,
+        duration: float,
+        after: float | None = None,
+        *,
+        exact_start: float | None = None,
+        prefer: list[int] | None = None,
+    ) -> tuple[float, set[int]] | None:
+        """Earliest first-fit of ``count`` resources for ``duration``."""
+        if count <= 0:
+            return (after if after is not None else self.origin, set())
+        after = self.origin if after is None else max(after, self.origin)
+        if exact_start is not None:
+            avail = self._window_free(exact_start, exact_start + duration, candidates)
+            if len(avail) >= count:
+                return exact_start, self._choose(avail, count, prefer)
+            return None
+        # candidate start times: `after` plus every slot boundary >= after
+        starts = {after}
+        starts.update(s.start for s in self.slots if s.start > after)
+        for t in sorted(starts):
+            avail = self._window_free(t, t + duration, candidates)
+            if len(avail) >= count:
+                return t, self._choose(avail, count, prefer)
+        return None
+
+    def find_slot_mask(
+        self,
+        candidates: int,
+        count: int,
+        duration: float,
+        after: float | None = None,
+        *,
+        exact_start: float | None = None,
+        prefer_bits: list[int] | None = None,
+    ) -> tuple[float, int] | None:
+        """Mask-facing adapter so the real policies run on the reference."""
+        prefer = ([self.index.rid_of(b) for b in prefer_bits]
+                  if prefer_bits is not None else None)
+        fit = self.find_slot(self.index.set_of(candidates), count, duration,
+                             after, exact_start=exact_start, prefer=prefer)
+        if fit is None:
+            return None
+        start, rids = fit
+        return start, self.index.mask_of(rids)
+
+    def _window_free(self, start: float, stop: float, candidates: set[int]) -> set[int]:
+        """Resources from ``candidates`` free over the whole [start, stop)."""
+        avail = set(candidates)
+        seen_any = False
+        for s in self.slots:
+            if s.stop <= start:
+                continue
+            if s.start >= stop:
+                break
+            seen_any = True
+            avail &= s.free
+            if not avail:
+                break
+        return avail if seen_any else set()
+
+    @staticmethod
+    def _choose(avail: set[int], count: int, prefer: list[int] | None) -> set[int]:
+        if prefer:
+            # degenerate duplicate entries collapse to their first occurrence
+            # (the contract both Gantts define; no real caller produces them —
+            # the seed's raw rank dict would otherwise let a duplicated entry
+            # tie with non-preferred resources)
+            prefer = list(dict.fromkeys(prefer))
+            rank = {r: i for i, r in enumerate(prefer)}
+            ordered = sorted(avail, key=lambda r: (rank.get(r, len(rank)), r))
+        else:
+            ordered = sorted(avail)
+        return set(ordered[:count])

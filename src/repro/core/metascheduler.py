@@ -11,21 +11,76 @@ should be executed is changed to 'toLaunch'."
 Everything here reads from and writes to the DB only; the in-memory Gantt is
 rebuilt on every pass (stateless between passes — a crash loses nothing, the
 paper's recovery argument).
+
+SQL load (§3.2.2 names it the scaling bottleneck): all per-pass derived
+state lives in a :class:`PassCache`, discarded at the end of the pass so
+statelessness is preserved. It memoises ``match_resources`` by
+``(properties, min_weight)`` — one query per *distinct* requirement
+expression instead of one per job — converts each distinct candidate list to
+a bitmask + preference bit order over the pass's ResourceIndex exactly once,
+caches the alive-resource set, and loads every running best-effort job's
+assignment in one grouped query. Writes are batched (``executemany`` for
+assignment/gantt inserts, one transaction for preemption flags). The pass's
+hot predicates are covered by indexes declared in ``schema.py``.
 """
 
 from __future__ import annotations
 
-import json
 import time as _time
 
 from repro.core import jobstate
-from repro.core.gantt import Gantt
+from repro.core.gantt import EPS, Gantt
 from repro.core.matching import BadProperties, match_resources
 from repro.core.policies import JobView, Placement, get_policy
+from repro.core.resourceindex import ResourceIndex
 
-__all__ = ["MetaScheduler"]
+__all__ = ["MetaScheduler", "PassCache"]
 
-EPS = 1e-9
+
+class PassCache:
+    """Pass-scoped memo of DB-derived scheduling state.
+
+    Lives for exactly one scheduling pass (the meta-scheduler is stateless
+    between passes — the recovery argument), so entries can never go stale:
+    resources/jobs only change between passes.
+    """
+
+    def __init__(self, db, index: ResourceIndex):
+        self.db = db
+        self.index = index
+        # (properties, min_weight) -> (mask, prefer_bits) | BadProperties
+        self._matches: dict[tuple[str, int], tuple[int, list[int]] | BadProperties] = {}
+
+    def candidates(self, properties: str, min_weight: int) -> tuple[int, list[int]]:
+        """Matched resources as (bitmask, preference bit order); raises
+        BadProperties (memoised too — a bad expression costs one query per
+        pass, not one per job carrying it)."""
+        key = (properties or "", min_weight)
+        hit = self._matches.get(key)
+        if hit is None:
+            try:
+                rids = match_resources(self.db, properties, min_weight=min_weight)
+                hit = (self.index.mask_of(rids), self.index.bits_of(rids))
+            except BadProperties as exc:
+                hit = exc
+            self._matches[key] = hit
+        if isinstance(hit, BadProperties):
+            raise hit
+        return hit
+
+    def besteffort_assignments(self) -> dict[int, int]:
+        """idJob -> assigned-resources mask for every running, not-yet-flagged
+        best-effort job — one grouped query for the whole victim pool."""
+        masks: dict[int, int] = {}
+        index = self.index
+        for r in self.db.query(
+                "SELECT a.idJob, a.idResource FROM assignments a "
+                "JOIN jobs j ON j.idJob=a.idJob "
+                "WHERE j.state IN ('toLaunch','Launching','Running') "
+                "AND j.bestEffort=1 AND j.toCancel=0"):
+            if r["idResource"] in index:
+                masks[r["idJob"]] = masks.get(r["idJob"], 0) | (1 << index.bit_of(r["idResource"]))
+        return masks
 
 
 class MetaScheduler:
@@ -42,11 +97,13 @@ class MetaScheduler:
         now = self.clock()
         summary = {"now": now, "launched": [], "reservations": [], "preempted": []}
 
-        gantt = self._build_gantt(now)
-        self._schedule_reservations(gantt, now, summary)
-        placements = self._schedule_queues(gantt, now, summary)
+        alive = self._alive_resources()
+        gantt = self._build_gantt(alive, now)
+        cache = PassCache(self.db, gantt.index)
+        self._schedule_reservations(gantt, cache, now, summary)
+        placements = self._schedule_queues(gantt, cache, now, summary)
         self._launch_due(placements, now, summary)
-        self._preempt_besteffort(placements, now, summary)
+        self._preempt_besteffort(cache, placements, now, summary)
         self.db.log_event("metascheduler", "info",
                           f"pass at {now:.3f}: launched={len(summary['launched'])}")
         return summary
@@ -56,8 +113,8 @@ class MetaScheduler:
         return {r["idResource"] for r in
                 self.db.query("SELECT idResource FROM resources WHERE state='Alive'")}
 
-    def _build_gantt(self, now: float) -> Gantt:
-        gantt = Gantt(self._alive_resources(), now)
+    def _build_gantt(self, alive: set[int], now: float) -> Gantt:
+        gantt = Gantt(alive, now)
         # occupied: executing jobs (until predicted end)...
         rows = self.db.query(
             "SELECT j.idJob, j.maxTime, j.startTime, a.idResource FROM jobs j "
@@ -71,16 +128,22 @@ class MetaScheduler:
         for jid, d in by_job.items():
             start = d["startTime"] if d["startTime"] is not None else now
             gantt.occupy(d["rids"], now, max(now, start + d["maxTime"]))
-        # ...and accepted reservations (persisted in the gantt table)
+        # ...and accepted reservations (persisted in the gantt table),
+        # grouped per interval so a wide reservation is one occupy sweep
+        by_window: dict[tuple[float, float], set[int]] = {}
         for r in self.db.query(
                 "SELECT g.idResource, g.startTime, g.stopTime FROM gantt g "
                 "JOIN jobs j ON j.idJob = g.idJob WHERE j.state='Waiting' "
                 "AND j.reservation='Scheduled'"):
-            gantt.occupy({r["idResource"]}, r["startTime"], r["stopTime"])
+            by_window.setdefault((r["startTime"], r["stopTime"]),
+                                 set()).add(r["idResource"])
+        for (start, stop), rids in by_window.items():
+            gantt.occupy(rids, start, stop)
         return gantt
 
     # -------------------------------------------------------- reservations
-    def _schedule_reservations(self, gantt: Gantt, now: float, summary: dict) -> None:
+    def _schedule_reservations(self, gantt: Gantt, cache: PassCache, now: float,
+                               summary: dict) -> None:
         """Negotiate 'toSchedule' reservations (fig. 1 toAckReservation path).
 
         "as long as the job meet the admission rules and the ressources are
@@ -93,29 +156,28 @@ class MetaScheduler:
         for job in rows:
             start_req = job["reservationStart"]
             try:
-                cands = set(match_resources(self.db, job["properties"],
-                                            min_weight=job["weight"]))
+                cands, _ = cache.candidates(job["properties"], job["weight"])
             except BadProperties as exc:
                 self._to_error(job["idJob"], str(exc), now)
                 continue
-            fit = gantt.find_slot(cands, job["nbNodes"], job["maxTime"],
-                                  exact_start=max(start_req, now))
+            fit = gantt.find_slot_mask(cands, job["nbNodes"], job["maxTime"],
+                                       exact_start=max(start_req, now))
             if fit is None:
                 self._to_error(job["idJob"],
                                "reservation slot unavailable", now)
                 continue
-            start, rids = fit
-            gantt.occupy(rids, start, start + job["maxTime"])
+            start, chosen = fit
+            gantt.occupy(chosen, start, start + job["maxTime"])
             # negotiation: Waiting -> toAckReservation -> (ack) -> Waiting,
             # with reservation substate moved to 'Scheduled' and the slot
             # persisted in the gantt table.
             jobstate.set_state(self.db, job["idJob"], jobstate.TO_ACK_RESERVATION)
             with self.db.transaction() as cur:
-                for rid in rids:
-                    cur.execute(
-                        "INSERT INTO gantt(idJob, idResource, startTime, stopTime) "
-                        "VALUES (?,?,?,?)",
-                        (job["idJob"], rid, start, start + job["maxTime"]))
+                cur.executemany(
+                    "INSERT INTO gantt(idJob, idResource, startTime, stopTime) "
+                    "VALUES (?,?,?,?)",
+                    [(job["idJob"], rid, start, start + job["maxTime"])
+                     for rid in gantt.index.iter_rids(chosen)])
                 cur.execute(
                     "UPDATE jobs SET reservation='Scheduled', reservationStart=?, "
                     "message=? WHERE idJob=?",
@@ -123,44 +185,47 @@ class MetaScheduler:
             jobstate.set_state(self.db, job["idJob"], jobstate.WAITING)
             summary["reservations"].append((job["idJob"], start))
         # fire reservations whose time has come
-        for job in self.db.query(
-                "SELECT idJob, reservationStart FROM jobs WHERE state='Waiting' "
-                "AND reservation='Scheduled' AND reservationStart <= ?", (now + EPS,)):
+        due = self.db.query(
+            "SELECT idJob, reservationStart FROM jobs WHERE state='Waiting' "
+            "AND reservation='Scheduled' AND reservationStart <= ?", (now + EPS,))
+        for job in due:
             rids = {r["idResource"] for r in self.db.query(
                 "SELECT idResource FROM gantt WHERE idJob=?", (job["idJob"],))}
-            alive = self._alive_resources()
-            if not rids <= alive:
+            # fresh aliveness check per firing (not the pass-start snapshot):
+            # a concurrent monitor thread may have killed a resource mid-pass,
+            # and launching onto it would fail downstream
+            if not rids <= self._alive_resources():
                 self._to_error(job["idJob"], "reserved resources lost", now)
                 continue
             self._assign_and_mark(job["idJob"], rids)
             summary["launched"].append(job["idJob"])
 
     # -------------------------------------------------------------- queues
-    def _queue_jobs(self, queue: str) -> list[JobView]:
+    def _queue_jobs(self, queue: str, cache: PassCache) -> list[JobView]:
         views = []
         for job in self.db.query(
                 "SELECT * FROM jobs WHERE state='Waiting' AND reservation='None' "
                 "AND queueName=? ORDER BY idJob", (queue,)):
             try:
-                cands = match_resources(self.db, job["properties"],
-                                        min_weight=job["weight"])
+                cands, prefer_bits = cache.candidates(job["properties"], job["weight"])
             except BadProperties as exc:
                 self._to_error(job["idJob"], str(exc), self.clock())
                 continue
             views.append(JobView(
                 idJob=job["idJob"], nbNodes=job["nbNodes"], weight=job["weight"],
                 maxTime=job["maxTime"], submissionTime=job["submissionTime"],
-                candidates=set(cands), prefer=list(cands),
+                candidates=cands, prefer=prefer_bits,
                 bestEffort=bool(job["bestEffort"])))
         return views
 
-    def _schedule_queues(self, gantt: Gantt, now: float, summary: dict) -> list[Placement]:
+    def _schedule_queues(self, gantt: Gantt, cache: PassCache, now: float,
+                         summary: dict) -> list[Placement]:
         placements: list[Placement] = []
         queues = self.db.query(
             "SELECT queueName, policy FROM queues WHERE state='Active' "
             "ORDER BY priority DESC, queueName")
         for q in queues:
-            jobs = self._queue_jobs(q["queueName"])
+            jobs = self._queue_jobs(q["queueName"], cache)
             if not jobs:
                 continue
             policy = get_policy(q["policy"])
@@ -174,19 +239,17 @@ class MetaScheduler:
                 summary["launched"].append(p.idJob)
 
     # --------------------------------------------------------- best effort
-    def _preempt_besteffort(self, placements: list[Placement], now: float,
-                            summary: dict) -> None:
+    def _preempt_besteffort(self, cache: PassCache, placements: list[Placement],
+                            now: float, summary: dict) -> None:
         """§3.3 two-step cancellation: the scheduler sets flags on best-effort
         jobs whose resources are needed; the generic cancellation module acts
         on the flags; the waiting job is scheduled "when coming back to the
         scheduler" (i.e. on a later pass, once resources are actually free).
         """
-        placed = {p.idJob for p in placements}
-        blocked = self.db.query(
+        started = {p.idJob for p in placements if p.starts_now(now)}
+        blocked = [j for j in self.db.query(
             "SELECT * FROM jobs WHERE state='Waiting' AND reservation='None' "
-            "AND bestEffort=0 ORDER BY idJob")
-        blocked = [j for j in blocked if j["idJob"] not in placed or not any(
-            p.idJob == j["idJob"] and p.starts_now(now) for p in placements)]
+            "AND bestEffort=0 ORDER BY idJob") if j["idJob"] not in started]
         if not blocked:
             return
         running_be = self.db.query(
@@ -201,15 +264,16 @@ class MetaScheduler:
             victims = sorted(running_be, key=lambda r: -(r["startTime"] or 0))
         else:  # fewest_nodes: minimise the number of cancelled jobs
             victims = sorted(running_be, key=lambda r: -r["nres"])
+        victim_masks = cache.besteffort_assignments()
+        free_now = self._free_now_mask(cache.index)
+        flagged: list[tuple[str, int]] = []
         for j in blocked:
             need = j["nbNodes"]
             try:
-                cands = set(match_resources(self.db, j["properties"],
-                                            min_weight=j["weight"]))
+                cands, _ = cache.candidates(j["properties"], j["weight"])
             except BadProperties:
                 continue
-            free_now = self._free_now(now)
-            deficit = need - len(free_now & cands)
+            deficit = need - (free_now & cands).bit_count()
             if deficit <= 0:
                 continue  # will launch on the next pass anyway
             reclaimable = 0
@@ -217,35 +281,34 @@ class MetaScheduler:
             for v in victims:
                 if reclaimable >= deficit:
                     break
-                v_rids = {r["idResource"] for r in self.db.query(
-                    "SELECT idResource FROM assignments WHERE idJob=?", (v["idJob"],))}
-                gain = len(v_rids & cands)
+                gain = (victim_masks.get(v["idJob"], 0) & cands).bit_count()
                 if gain > 0:
                     chosen.append(v["idJob"])
                     reclaimable += gain
             if reclaimable >= deficit:
-                with self.db.transaction() as cur:
-                    for vid in chosen:
-                        cur.execute("UPDATE jobs SET toCancel=1, message=? WHERE idJob=?",
-                                    ("preempted: resources required by job "
-                                     f"{j['idJob']}", vid))
+                flagged.extend(
+                    (f"preempted: resources required by job {j['idJob']}", vid)
+                    for vid in chosen)
                 summary["preempted"].extend(chosen)
                 victims = [v for v in victims if v["idJob"] not in chosen]
-                self.db.notify("cancel")
+        if flagged:
+            with self.db.transaction() as cur:
+                cur.executemany(
+                    "UPDATE jobs SET toCancel=1, message=? WHERE idJob=?", flagged)
+            self.db.notify("cancel")
 
     # -------------------------------------------------------------- helpers
-    def _free_now(self, now: float) -> set[int]:
+    def _free_now_mask(self, index: ResourceIndex) -> int:
         busy = {r["idResource"] for r in self.db.query(
             "SELECT a.idResource FROM assignments a JOIN jobs j ON j.idJob=a.idJob "
             "WHERE j.state IN ('toLaunch','Launching','Running')")}
-        return self._alive_resources() - busy
+        return index.full_mask & ~index.mask_of(busy)
 
-    def _assign_and_mark(self, job_id: int, rids: set[int]) -> None:
+    def _assign_and_mark(self, job_id: int, rids) -> None:
         with self.db.transaction() as cur:
             cur.execute("DELETE FROM assignments WHERE idJob=?", (job_id,))
-            for rid in rids:
-                cur.execute("INSERT INTO assignments(idJob, idResource) VALUES (?,?)",
-                            (job_id, rid))
+            cur.executemany("INSERT INTO assignments(idJob, idResource) VALUES (?,?)",
+                            [(job_id, rid) for rid in rids])
         jobstate.set_state(self.db, job_id, jobstate.TO_LAUNCH)
 
     def _to_error(self, job_id: int, message: str, now: float) -> None:

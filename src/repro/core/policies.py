@@ -28,6 +28,14 @@ Every policy is a pure function ``(gantt, jobs, now) -> [Placement]`` over
 the in-memory Gantt; persistence stays in the meta-scheduler, so policies
 are trivially testable — the "simple and opened platform for
 experimentations" goal of the paper.
+
+Hot-path representation: a job's ``candidates``/``prefer`` may be carried
+natively as a bitmask + bit-position list over the gantt's
+:class:`~repro.core.resourceindex.ResourceIndex` (what the meta-scheduler
+builds), or as a plain ``set``/rid list (what tests and ad-hoc callers
+write) — ``JobView.mask_and_prefer`` normalises either form once per job, so
+all five policies run the bitwise fast path without semantic change.
+``Placement.resources`` decodes back to a ``set`` of resource ids on demand.
 """
 
 from __future__ import annotations
@@ -35,38 +43,73 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field
 
-from repro.core.gantt import Gantt
+from repro.core.gantt import EPS, Gantt, ResourceIndex
 
 __all__ = ["JobView", "Placement", "POLICIES", "register_policy", "get_policy"]
-
-EPS = 1e-9
 
 
 @dataclass
 class JobView:
-    """Scheduler-facing projection of a jobs-table row."""
+    """Scheduler-facing projection of a jobs-table row.
+
+    ``candidates`` is either a ``set`` of matched resource ids or an ``int``
+    bitmask over the scheduling pass's ResourceIndex; ``prefer`` is the
+    placement order (locality) in the matching representation — resource ids
+    for the set form, bit positions for the mask form.
+    """
     idJob: int
     nbNodes: int
     weight: int
     maxTime: float
     submissionTime: float
-    candidates: set[int] = field(default_factory=set)  # matched resource ids
-    prefer: list[int] | None = None                    # placement order (locality)
+    candidates: set[int] | int = field(default_factory=set)
+    prefer: list[int] | None = None
     bestEffort: bool = False
 
     @property
     def procs(self) -> int:
         return self.nbNodes * self.weight
 
+    def mask_and_prefer(self, index: ResourceIndex) -> tuple[int, list[int] | None]:
+        """Normalise to (candidates bitmask, prefer bit positions)."""
+        if isinstance(self.candidates, int):
+            return self.candidates, self.prefer
+        mask = index.mask_of(self.candidates)
+        prefer_bits = index.bits_of(self.prefer) if self.prefer else None
+        return mask, prefer_bits
 
-@dataclass
+
 class Placement:
-    idJob: int
-    start: float
-    resources: set[int]
+    """A scheduled (job, start, resources) triple.
+
+    Stores the chosen resources as a bitmask when built by the mask-native
+    policies; ``resources`` decodes (and caches) the ``set`` view for
+    persistence and tests.
+    """
+
+    __slots__ = ("idJob", "start", "index", "_mask", "_set")
+
+    def __init__(self, idJob: int, start: float, resources,
+                 index: ResourceIndex | None = None):
+        self.idJob = idJob
+        self.start = start
+        self.index = index
+        if isinstance(resources, int):
+            self._mask, self._set = resources, None
+        else:
+            self._mask, self._set = None, set(resources)
+
+    @property
+    def resources(self) -> set[int]:
+        if self._set is None:
+            self._set = self.index.set_of(self._mask)
+        return self._set
 
     def starts_now(self, now: float) -> bool:
         return self.start <= now + EPS
+
+    def __repr__(self):  # pragma: no cover - debug aid
+        return f"Placement(idJob={self.idJob}, start={self.start}, resources={self.resources})"
 
 
 PolicyFn = "callable[[Gantt, list[JobView], float], list[Placement]]"
@@ -95,14 +138,17 @@ def _place_conservative(gantt: Gantt, ordered: list[JobView], now: float,
     (strict FIFO: each start >= previous start)."""
     out: list[Placement] = []
     floor = now
+    index = gantt.index
     for job in ordered:
-        fit = gantt.find_slot(job.candidates, job.nbNodes, job.maxTime,
-                              after=floor if chain else now, prefer=job.prefer)
+        cand, prefer_bits = job.mask_and_prefer(index)
+        fit = gantt.find_slot_mask(cand, job.nbNodes, job.maxTime,
+                                   after=floor if chain else now,
+                                   prefer_bits=prefer_bits)
         if fit is None:
             continue  # never fits (bad properties); meta-scheduler flags it
-        start, rids = fit
-        gantt.occupy(rids, start, start + job.maxTime)
-        out.append(Placement(job.idJob, start, rids))
+        start, chosen = fit
+        gantt.occupy(chosen, start, start + job.maxTime)
+        out.append(Placement(job.idJob, start, chosen, index=index))
         if chain:
             floor = max(floor, start)
     return out
@@ -141,25 +187,27 @@ def easy_backfill(gantt: Gantt, jobs: list[JobView], now: float) -> list[Placeme
     out: list[Placement] = []
     head_start = math.inf
     head_planned = False
+    index = gantt.index
     for job in ordered:
-        fit = gantt.find_slot(job.candidates, job.nbNodes, job.maxTime,
-                              after=now, prefer=job.prefer)
+        cand, prefer_bits = job.mask_and_prefer(index)
+        fit = gantt.find_slot_mask(cand, job.nbNodes, job.maxTime,
+                                   after=now, prefer_bits=prefer_bits)
         if fit is None:
             continue
-        start, rids = fit
+        start, chosen = fit
         if start <= now + EPS:
-            gantt.occupy(rids, start, start + job.maxTime)
-            out.append(Placement(job.idJob, start, rids))
+            gantt.occupy(chosen, start, start + job.maxTime)
+            out.append(Placement(job.idJob, start, chosen, index=index))
         elif not head_planned:
             # first job that cannot run now gets the (only) reservation
-            gantt.occupy(rids, start, start + job.maxTime)
-            out.append(Placement(job.idJob, start, rids))
+            gantt.occupy(chosen, start, start + job.maxTime)
+            out.append(Placement(job.idJob, start, chosen, index=index))
             head_start, head_planned = start, True
         else:
             # aggressive: no guarantee — only placed if it starts immediately
             # (checked above); a job that would start after `now` but before
             # the head's reservation is fine too:
             if start + job.maxTime <= head_start + EPS:
-                gantt.occupy(rids, start, start + job.maxTime)
-                out.append(Placement(job.idJob, start, rids))
+                gantt.occupy(chosen, start, start + job.maxTime)
+                out.append(Placement(job.idJob, start, chosen, index=index))
     return out

@@ -110,6 +110,17 @@ ALL_INDEXES = [
     "CREATE INDEX IF NOT EXISTS idx_assign_job ON assignments(idJob)",
     "CREATE INDEX IF NOT EXISTS idx_gantt_job ON gantt(idJob)",
     "CREATE INDEX IF NOT EXISTS idx_events_job ON event_log(job_id)",
+    # covering indexes for the meta-scheduler pass's hot predicates:
+    # queue scan (state, reservation, queue, ordered by idJob) ...
+    "CREATE INDEX IF NOT EXISTS idx_jobs_sched "
+    "ON jobs(state, reservation, queueName, idJob)",
+    # ... preemption scans (running best-effort victims / blocked regulars)
+    "CREATE INDEX IF NOT EXISTS idx_jobs_be ON jobs(bestEffort, state, toCancel)",
+    # ... resource matching (weight floor + alive filter, locality order)
+    "CREATE INDEX IF NOT EXISTS idx_resources_match "
+    "ON resources(state, weight, pod, switch, idResource)",
+    # ... reverse lookups (which jobs hold a resource: oarnodes, failover)
+    "CREATE INDEX IF NOT EXISTS idx_assign_resource ON assignments(idResource)",
 ]
 
 # Default admission rules, stored in the DB as code exactly as the paper

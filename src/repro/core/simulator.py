@@ -22,12 +22,11 @@ from typing import Any
 from repro.core import api, jobstate
 from repro.core.central import CentralModule
 from repro.core.db import connect
+from repro.core.gantt import EPS
 from repro.core.launcher import Executor, SimTransport, TaktukLauncher
 from repro.core.metascheduler import MetaScheduler
 
 __all__ = ["ClusterSimulator", "JobRecord"]
-
-EPS = 1e-9
 
 
 @dataclass(order=True)

@@ -1,0 +1,115 @@
+"""Minimal stand-in for `hypothesis` so the suite runs without the package.
+
+Installed into ``sys.modules`` by ``conftest.py`` only when the real
+hypothesis is absent. It implements just the surface this test suite uses —
+``given``, ``settings``, and the ``strategies`` functions ``integers``,
+``floats``, ``booleans``, ``sampled_from``, ``lists``, ``sets``, ``tuples``,
+``just`` — as plain deterministic random sampling (seeded per test, so
+failures reproduce). No shrinking, no database, no phases: a failing example
+is re-raised with the drawn arguments attached to the assertion message.
+"""
+
+from __future__ import annotations
+
+import random
+import types
+
+__version__ = "0.0-compat"
+
+DEFAULT_MAX_EXAMPLES = 100
+
+
+class Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+def integers(min_value=0, max_value=1 << 16):
+    return Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def floats(min_value=0.0, max_value=1.0, *, allow_nan=None, allow_infinity=None,
+           width=None):
+    return Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+
+def booleans():
+    return Strategy(lambda rnd: rnd.random() < 0.5)
+
+
+def just(value):
+    return Strategy(lambda rnd: value)
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return Strategy(lambda rnd: rnd.choice(seq))
+
+
+def lists(elements: Strategy, *, min_size=0, max_size=None):
+    hi = max_size if max_size is not None else min_size + 10
+
+    def draw(rnd):
+        return [elements.example(rnd) for _ in range(rnd.randint(min_size, hi))]
+    return Strategy(draw)
+
+
+def sets(elements: Strategy, *, min_size=0, max_size=None):
+    hi = max_size if max_size is not None else min_size + 10
+
+    def draw(rnd):
+        want = rnd.randint(min_size, hi)
+        out: set = set()
+        for _ in range(want * 20 + 20):  # bounded attempts on small domains
+            if len(out) >= want:
+                break
+            out.add(elements.example(rnd))
+        return out
+    return Strategy(draw)
+
+
+def tuples(*elements: Strategy):
+    return Strategy(lambda rnd: tuple(e.example(rnd) for e in elements))
+
+
+def settings(**kw):
+    """Decorator form only (what the suite uses); unknown options ignored."""
+    def deco(fn):
+        fn._hc_max_examples = kw.get("max_examples", DEFAULT_MAX_EXAMPLES)
+        return fn
+    return deco
+
+
+def given(*strategies_args, **strategies_kw):
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_hc_max_examples",
+                        getattr(fn, "_hc_max_examples", DEFAULT_MAX_EXAMPLES))
+            rnd = random.Random(f"hypothesis-compat:{fn.__module__}.{fn.__qualname__}")
+            for i in range(n):
+                drawn = [s.example(rnd) for s in strategies_args]
+                drawn_kw = {k: s.example(rnd) for k, s in strategies_kw.items()}
+                try:
+                    fn(*drawn, **drawn_kw)
+                except Exception as exc:
+                    raise AssertionError(
+                        f"falsifying example (#{i + 1}): "
+                        f"args={drawn!r} kwargs={drawn_kw!r}") from exc
+        # deliberately NOT functools.wraps: pytest must see a zero-arg
+        # signature, or it treats the drawn parameters as fixtures
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco
+
+
+# expose a module-like `strategies` namespace (for `import h.strategies`,
+# `from hypothesis import strategies as st`, and friends)
+strategies = types.ModuleType("hypothesis.strategies")
+for _name in ("integers", "floats", "booleans", "just", "sampled_from",
+              "lists", "sets", "tuples"):
+    setattr(strategies, _name, globals()[_name])

@@ -1,9 +1,24 @@
+import importlib.util
 import os
 import sys
 
 # tests must see the real device count (1), NOT the dry-run's 512 — the
 # dry-run sets its flag itself, in its own process.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# The property tests want hypothesis; the container may not ship it. Install
+# the minimal random-sampling shim in its place so the suite still collects
+# and the properties still get exercised (weaker generation, same asserts).
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        os.path.join(os.path.dirname(__file__), "_hypothesis_compat.py"))
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _mod.strategies
 
 import jax  # noqa: E402
 

@@ -29,6 +29,30 @@ def test_transaction_rollback():
     assert db.scalar("SELECT COUNT(*) FROM resources") == 1
 
 
+def test_nested_transaction_atomicity():
+    """Inner failure rolls back only the inner writes; outer failure rolls
+    back the whole unit — even when the nested context is the first action
+    (sqlite's deferred implicit BEGIN must not let the savepoint commit)."""
+    db = connect()
+    with pytest.raises(RuntimeError):
+        with db.transaction() as outer:
+            with db.transaction() as inner:
+                inner.execute("INSERT INTO resources(hostname) VALUES ('a')")
+            outer.execute("INSERT INTO resources(hostname) VALUES ('b')")
+            raise RuntimeError("outer boom")
+    assert db.scalar("SELECT COUNT(*) FROM resources") == 0
+
+    with db.transaction() as outer:
+        outer.execute("INSERT INTO resources(hostname) VALUES ('kept')")
+        with pytest.raises(RuntimeError):
+            with db.transaction() as inner:
+                inner.execute("INSERT INTO resources(hostname) VALUES ('gone')")
+                raise RuntimeError("inner boom")
+        outer.execute("INSERT INTO resources(hostname) VALUES ('kept2')")
+    rows = {r["hostname"] for r in db.query("SELECT hostname FROM resources")}
+    assert rows == {"kept", "kept2"}
+
+
 def test_crash_recovery_from_file(tmp_path):
     """§2: reopening the DB recovers the full system state — mid-flight
     jobs included. Kill the process state, reopen, everything is there."""
