@@ -114,6 +114,41 @@ def run_esp_multimode(policy: str, *, procs: int = 34,
                      work / (procs * elapsed), famine, len(done))
 
 
+def run_esp_hier(policy: str, *, procs: int = 32, seed: int = 0) -> EspResult:
+    """ESP *hierarchical* variant: the same job mix expressed in the typed
+    request language on a 2-pod × 2-switch cluster. Jobs that fit inside one
+    switch demand single-switch interconnection — as a *moldable* request
+    whose fallback relaxes to single-pod, so the declared order (tight
+    placement first, looser second) is exercised under a full backlog; jobs
+    wider than a pod stay flat. End-to-end coverage of parse → admission →
+    compile → hierarchical find_slot → launch."""
+    sim = ClusterSimulator(n_nodes=procs, weight=1, pods=2,
+                           switches_per_pod=2, policy=policy,
+                           check_nodes=False, scheduler_period=10_000.0)
+    jobs = esp_jobs(procs, seed=seed)
+    work = sum(j["nb_nodes"] * j["duration"] for j in jobs)
+    per_switch = procs // 4
+    per_pod = procs // 2
+    for j in jobs:
+        n = j["nb_nodes"]
+        if n <= per_switch:
+            req = f"/switch=1/host={n} | /pod=1/host={n}"
+        elif n <= per_pod:
+            req = f"/pod=1/host={n} | /host={n}"
+        else:
+            req = f"/host={n}"
+        sim.submit(0.0, duration=j["duration"], request=req,
+                   max_time=j["duration"], tag=j["tag"])
+    records = sim.run()
+    done = [r for r in records if r.state == "Terminated"]
+    assert len(done) == len(jobs), (len(done), len(jobs))
+    elapsed = max(r.stop for r in done)
+    big = [r for r in done if r.procs >= procs]
+    famine = max((r.wait for r in big), default=0.0)
+    return EspResult(policy, procs, work, elapsed, work / (procs * elapsed),
+                     famine, len(done))
+
+
 def run(procs: int = 34, seed: int = 0) -> list[EspResult]:
     return [run_esp(p, procs=procs, seed=seed) for p in POLICIES]
 
@@ -134,6 +169,14 @@ def main() -> None:
           f"{'done':>5s}")
     for pol in POLICIES:
         r = run_esp_multimode(pol)
+        print(f"{r.policy:22s} {r.elapsed:9.0f} {r.efficiency:10.4f} "
+              f"{r.n_jobs:5d}")
+    print("\n# ESP2 hierarchical test (typed requests: single-switch "
+          "moldable-to-single-pod, 2 pods x 2 switches)")
+    print(f"{'policy':22s} {'elapsed':>9s} {'efficiency':>10s} "
+          f"{'done':>5s}")
+    for pol in POLICIES:
+        r = run_esp_hier(pol)
         print(f"{r.policy:22s} {r.elapsed:9.0f} {r.efficiency:10.4f} "
               f"{r.n_jobs:5d}")
 

@@ -25,10 +25,27 @@ SEED_BASELINE = {"nodes": 10000, "backlog": 500,
                  "pass_wall_s": 36.84, "sql_per_pass": 511.0}
 
 
+def _speedup(r) -> dict:
+    return {
+        "pass_wall": round(SEED_BASELINE["pass_wall_s"] / r.schedule_pass_s, 2)
+        if r.schedule_pass_s else None,
+        "sql_per_pass": round(SEED_BASELINE["sql_per_pass"] / r.sql_per_pass, 2)
+        if r.sql_per_pass else None,
+    }
+
+
+def _headline(results) -> object | None:
+    head = [r for r in results if r.nodes == SEED_BASELINE["nodes"]
+            and r.backlog == SEED_BASELINE["backlog"]]
+    return head[0] if head else None
+
+
 def write_bench_sched(path: str = BENCH_PATH, *, scale_results=None,
-                      burst_results=None, smoke: bool | None = None) -> dict:
+                      burst_results=None, hier_results=None,
+                      smoke: bool | None = None) -> dict:
     """Merge suite results into BENCH_sched.json (section per suite, so
-    scale and burst can each emit independently without clobbering)."""
+    scale, the hierarchical-request variant and burst can each emit
+    independently without clobbering)."""
     payload: dict = {}
     if os.path.exists(path):
         try:
@@ -44,17 +61,18 @@ def write_bench_sched(path: str = BENCH_PATH, *, scale_results=None,
     if scale_results is not None:  # run never clobbers the full-scale record
         payload["scale_smoke" if smoke else "scale"] = \
             [dataclasses.asdict(r) for r in scale_results]
-        head = [r for r in scale_results
-                if r.nodes == SEED_BASELINE["nodes"]
-                and r.backlog == SEED_BASELINE["backlog"]]
-        if head and not smoke:
-            r = head[0]
-            payload["speedup_vs_seed"] = {
-                "pass_wall": round(SEED_BASELINE["pass_wall_s"] / r.schedule_pass_s, 2)
-                if r.schedule_pass_s else None,
-                "sql_per_pass": round(SEED_BASELINE["sql_per_pass"] / r.sql_per_pass, 2)
-                if r.sql_per_pass else None,
-            }
+        r = _headline(scale_results)
+        if r is not None and not smoke:
+            payload["speedup_vs_seed"] = _speedup(r)
+    if hier_results is not None:
+        # typed-request compile path (hierarchical + moldable backlog):
+        # tracked against the same frozen flat-seed baseline so the compile
+        # layer's overhead stays visible next to the PR-1 margins
+        payload["scale_hier_smoke" if smoke else "scale_hier"] = \
+            [dataclasses.asdict(r) for r in hier_results]
+        r = _headline(hier_results)
+        if r is not None and not smoke:
+            payload["speedup_vs_seed_hier"] = _speedup(r)
     if burst_results is not None:
         payload["burst_smoke" if smoke else "burst"] = \
             [dataclasses.asdict(r) for r in burst_results]

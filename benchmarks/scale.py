@@ -27,18 +27,49 @@ class ScaleResult:
     sql_per_pass: float
 
 
-def run_one(n_nodes: int, backlog: int = 500, *, seed: int = 0) -> ScaleResult:
+def _hier_request(n: int, rng) -> str:
+    """Hierarchical shape for an n-host job over the SAME size spectrum as
+    the flat mix (1..256 hosts), so speedup_vs_seed_hier compares like
+    workloads: switch-constrained (incl. moldable fallback) while n fits a
+    64-host switch, pod-constrained up to a 256-host pod, flat beyond —
+    exercising the compile path, HierarchyIndex and block selector at scale."""
+    if n <= 64:
+        return rng.choice([
+            f"/host={n}",
+            f"/switch=1/host={n}",
+            f"/pod=1/switch=1/host={n}",
+            f"/switch=1/host={n} | /pod=1/host={n}",
+        ])
+    return rng.choice([f"/pod=1/host={n}", f"/host={n}"])
+
+
+def run_one(n_nodes: int, backlog: int = 500, *, seed: int = 0,
+            hierarchical: bool = False) -> ScaleResult:
     db = connect()
     pods = max(1, n_nodes // 256)
+    switches_per_pod = 4 if hierarchical else 1
     for p in range(pods):
         count = n_nodes // pods + (1 if p < n_nodes % pods else 0)
-        api.add_resources(db, [f"p{p}-h{i}" for i in range(count)],
-                          weight=4, pod=p, switch=f"sw{p}")
+        per_sw = max(1, count // switches_per_pod)
+        for s in range(switches_per_pod):
+            lo = s * per_sw
+            hi = count if s == switches_per_pod - 1 else min(count, lo + per_sw)
+            if lo >= hi:
+                continue
+            api.add_resources(db, [f"p{p}-h{i}" for i in range(lo, hi)],
+                              weight=4, pod=p,
+                              switch=f"sw{p}.{s}" if switches_per_pod > 1
+                              else f"sw{p}")
     rng = random.Random(seed)
     now = 1000.0
     for _ in range(backlog):
-        api.oarsub(db, "work", nb_nodes=rng.choice([1, 2, 4, 8, 16, 64, 256]),
-                   max_time=rng.uniform(600, 86400), clock=lambda: now)
+        n = rng.choice([1, 2, 4, 8, 16, 64, 256])
+        if hierarchical:
+            api.oarsub(db, "work", request=_hier_request(n, rng),
+                       max_time=rng.uniform(600, 86400), clock=lambda: now)
+        else:
+            api.oarsub(db, "work", nb_nodes=n,
+                       max_time=rng.uniform(600, 86400), clock=lambda: now)
     sched = MetaScheduler(db, clock=lambda: now)
     q0 = db.query_count
     t0 = time.perf_counter()
@@ -58,10 +89,23 @@ def run_one(n_nodes: int, backlog: int = 500, *, seed: int = 0) -> ScaleResult:
 
 SIZES = (100, 1000, 4096, 10000)
 SMOKE_SIZES = (1000,)  # tier-1 time budget: one fast point, same backlog
+HIER_SIZES = (1000, 10000)  # hierarchical variant: fast point + headline
 
 
 def run(sizes=SIZES) -> list[ScaleResult]:
     return [run_one(n) for n in sizes]
+
+
+def run_hier(sizes=HIER_SIZES) -> list[ScaleResult]:
+    return [run_one(n, hierarchical=True) for n in sizes]
+
+
+def _print_table(results: list[ScaleResult]) -> None:
+    print(f"{'nodes':>6s} {'sched_pass_s':>13s} {'SQL/pass':>9s} "
+          f"{'taktuk_model_s':>15s} {'taktuk_wall_s':>14s}")
+    for r in results:
+        print(f"{r.nodes:6d} {r.schedule_pass_s:13.3f} {r.sql_per_pass:9.0f} "
+              f"{r.monitor_sweep_modelled_s:15.3f} {r.monitor_sweep_wall_s:14.3f}")
 
 
 def main(argv: list[str] | None = None, *, smoke: bool = False) -> list[ScaleResult]:
@@ -69,15 +113,15 @@ def main(argv: list[str] | None = None, *, smoke: bool = False) -> list[ScaleRes
     smoke = smoke or "--smoke" in args
     print("# control-plane scale (beyond paper): one scheduling pass, "
           "500-job backlog" + (" [smoke]" if smoke else ""))
-    print(f"{'nodes':>6s} {'sched_pass_s':>13s} {'SQL/pass':>9s} "
-          f"{'taktuk_model_s':>15s} {'taktuk_wall_s':>14s}")
     results = run(SMOKE_SIZES if smoke else SIZES)
-    for r in results:
-        print(f"{r.nodes:6d} {r.schedule_pass_s:13.3f} {r.sql_per_pass:9.0f} "
-              f"{r.monitor_sweep_modelled_s:15.3f} {r.monitor_sweep_wall_s:14.3f}")
+    _print_table(results)
+    print("# hierarchical-request backlog (typed request compile path: "
+          "switch/pod constraints + moldable alternatives)")
+    hier = run_hier(SMOKE_SIZES if smoke else HIER_SIZES)
+    _print_table(hier)
     # deferred so direct-script runs can fix sys.path in __main__ first
     from benchmarks.record import write_bench_sched
-    write_bench_sched(scale_results=results, smoke=smoke)
+    write_bench_sched(scale_results=results, hier_results=hier, smoke=smoke)
     return results
 
 

@@ -11,7 +11,11 @@ experiments; `api` is the oarsub/oardel/oarstat command set.
 from repro.core.db import Database, connect
 from repro.core.api import (oarsub, oardel, oarstat, oarhold, oarresume,
                             oarnodes, add_resources, remove_resources,
-                            AdmissionError)
+                            AdmissionError, ClusterClient, JobRequest,
+                            JobInfo, NodeInfo, UnknownJob,
+                            InvalidStateTransition)
+from repro.core.request import (BadRequest, ResourceRequest, parse_request,
+                                canonical_request)
 from repro.core.central import CentralModule
 from repro.core.metascheduler import MetaScheduler
 from repro.core.launcher import Executor, TaktukLauncher, SimTransport
@@ -22,4 +26,7 @@ __all__ = [
     "oarresume", "oarnodes", "add_resources", "remove_resources",
     "AdmissionError", "CentralModule", "MetaScheduler", "Executor",
     "TaktukLauncher", "SimTransport", "ClusterSimulator",
+    "ClusterClient", "JobRequest", "JobInfo", "NodeInfo",
+    "UnknownJob", "InvalidStateTransition",
+    "BadRequest", "ResourceRequest", "parse_request", "canonical_request",
 ]

@@ -35,17 +35,23 @@ _SAFE_BUILTINS = {
 
 
 def _cluster_ctx(db) -> dict[str, Any]:
+    # registered capacity, NOT just currently-Alive: a transient node
+    # failure (or pending elastic scale-up) must not reject submissions —
+    # the job simply waits until resources return. One grouped query per
+    # aliveness flavour (submission is a hot path under bursts); the
+    # hierarchy extents let rules validate parsed resource requests
+    # (job['request']) against the actual cluster topology.
+    total = db.query_one(
+        "SELECT COUNT(*) AS nodes, COALESCE(SUM(weight),0) AS procs, "
+        "COUNT(DISTINCT pod) AS pods, "
+        "COUNT(DISTINCT pod || '/' || switch) AS switches FROM resources")
+    alive = db.query_one(
+        "SELECT COUNT(*) AS nodes, COALESCE(SUM(weight),0) AS procs "
+        "FROM resources WHERE state='Alive'")
     return {
-        # registered capacity, NOT just currently-Alive: a transient node
-        # failure (or pending elastic scale-up) must not reject submissions —
-        # the job simply waits until resources return.
-        "total_nodes": db.scalar("SELECT COUNT(*) FROM resources") or 0,
-        "total_procs": db.scalar(
-            "SELECT COALESCE(SUM(weight),0) FROM resources") or 0,
-        "alive_nodes": db.scalar(
-            "SELECT COUNT(*) FROM resources WHERE state='Alive'") or 0,
-        "alive_procs": db.scalar(
-            "SELECT COALESCE(SUM(weight),0) FROM resources WHERE state='Alive'") or 0,
+        "total_nodes": total["nodes"], "total_procs": total["procs"],
+        "total_pods": total["pods"], "total_switches": total["switches"],
+        "alive_nodes": alive["nodes"], "alive_procs": alive["procs"],
         "waiting_jobs": db.scalar("SELECT COUNT(*) FROM jobs WHERE state='Waiting'") or 0,
         "known_queues": [r["queueName"] for r in db.query("SELECT queueName FROM queues")],
     }

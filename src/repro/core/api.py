@@ -1,4 +1,4 @@
-"""User-facing commands — §2.1.
+"""User-facing commands and the typed client facade — §2.1, redesigned.
 
 "the interface is made of independent commands for submission (command
 *oarsub*), cancellation (command *oardel*) or the monitoring (command
@@ -7,21 +7,71 @@ system, they send or retrieve information using directly the database and
 they interact with OAR modules by sending notifications to the central
 module."
 
-Each function below is such a command: DB in, DB out, one notification.
+Two layers live here:
+
+* The paper's command set (``oarsub``/``oardel``/…): DB in, DB out, one
+  notification. ``oarsub`` now accepts a typed ``request`` — the
+  hierarchical resource-request language of :mod:`repro.core.request` — and
+  always persists its canonical JSON in ``jobs.resourceRequest``; the
+  classic ``nb_nodes=/weight=/properties=`` keywords are a shim that builds
+  the equivalent single-level request, so legacy callers schedule
+  byte-identically.
+* :class:`ClusterClient`: the typed facade (submit/cancel/hold/resume/stat/
+  nodes/resize) that takes :class:`JobRequest` and returns
+  :class:`JobInfo`/:class:`NodeInfo` records instead of raw row dicts, and
+  surfaces :class:`UnknownJob`/:class:`InvalidStateTransition` instead of
+  silent 0-row updates.
 """
 
 from __future__ import annotations
 
 import json
 import time as _time
+from dataclasses import dataclass
 from typing import Any
 
 from repro.core import jobstate
 from repro.core.admission import AdmissionError, run_admission
 from repro.core.matching import validate_properties
+from repro.core.request import (BadRequest, ResourceRequest, parse_request,
+                                request_from_json, request_to_json)
 
 __all__ = ["oarsub", "oardel", "oarstat", "oarhold", "oarresume", "oarnodes",
-           "add_resources", "remove_resources", "AdmissionError"]
+           "add_resources", "remove_resources", "AdmissionError",
+           "ClusterClient", "JobRequest", "JobInfo", "NodeInfo",
+           "UnknownJob", "InvalidStateTransition"]
+
+
+class UnknownJob(KeyError):
+    """The job id names no row in the jobs table."""
+
+    def __str__(self) -> str:  # KeyError quotes its arg; keep the message
+        return self.args[0] if self.args else "unknown job"
+
+
+class InvalidStateTransition(jobstate.IllegalTransition):
+    """The command is meaningless in the job's current state (e.g. cancelling
+    an already-terminated job). Subclasses IllegalTransition so callers
+    catching the state-machine error keep working."""
+
+
+def _normalise_request(request, nb_nodes: int, weight: int,
+                       properties: str) -> list[ResourceRequest]:
+    """Any accepted request spelling -> parsed alternatives list."""
+    if request is None:
+        return [ResourceRequest.from_legacy(nb_nodes, weight, properties)]
+    if properties:
+        raise BadRequest("pass filters inside the request "
+                         "('/host=4{...}'), not via properties=")
+    if isinstance(request, str):
+        return parse_request(request)
+    if isinstance(request, ResourceRequest):
+        return [request]
+    if isinstance(request, (list, tuple)) and request and \
+            all(isinstance(a, ResourceRequest) for a in request):
+        return list(request)
+    raise BadRequest(f"request must be a string, a ResourceRequest or a "
+                     f"list of them, got {type(request).__name__}")
 
 
 def oarsub(db, command: str | dict, *, user: str = "user", queue: str | None = None,
@@ -29,48 +79,103 @@ def oarsub(db, command: str | dict, *, user: str = "user", queue: str | None = N
            properties: str = "", reservation_start: float | None = None,
            job_type: str = "PASSIVE", info_type: str = "",
            launching_directory: str = "", best_effort: bool | None = None,
-           clock=None) -> int:
+           request: str | ResourceRequest | list[ResourceRequest] | None = None,
+           deadline: float | None = None, clock=None) -> int:
     """Submit a job. Returns its idJob (its index in the jobs table).
 
     Figure 3 flow: fetch admission rules from the DB → rules fill defaults
     and validate → insert into jobs table → return id to the user → notify
     the central module ("taken into account only if no scheduling was
     already planned" — the coalescing lives in CentralModule.notify).
+
+    ``request`` is the typed resource request (a request-language string,
+    e.g. ``"/pod=1/switch=1/host=4"``, parsed alternatives, or None for the
+    legacy ``nb_nodes``/``weight``/``properties`` shim). Admission rules see
+    the parsed form as ``job['request']`` (list of dicts, mutable) and may
+    cap or rewrite it; the post-admission form is what gets stored and
+    scheduled. The first alternative is mirrored into the legacy columns
+    (nbNodes = host floor, weight, properties = combined filter) so every
+    flat consumer — preemption deficits, admission rule 10, oarstat — keeps
+    reading meaningful numbers.
     """
     clock = clock or _time.time
     if isinstance(command, dict):
         command = json.dumps(command)
+    if request is not None and (nb_nodes != 1 or weight != 1):
+        raise BadRequest("pass counts inside the request ('/host=4, "
+                         "weight=2'), not via nb_nodes=/weight=")
+    alternatives = _normalise_request(request, nb_nodes, weight, properties)
+    first = alternatives[0]
     job: dict[str, Any] = {
         "jobType": job_type, "infoType": info_type, "user": user,
-        "nbNodes": nb_nodes, "weight": weight, "command": command,
-        "maxTime": max_time, "properties": validate_properties(properties),
+        "nbNodes": first.min_hosts, "weight": first.weight, "command": command,
+        "maxTime": max_time, "properties": validate_properties(first.combined_filter),
         "launchingDirectory": launching_directory,
         "reservationStart": reservation_start,
+        "submissionTime": clock(),
+        "request": [a.to_dict() for a in alternatives],
+        "deadline": deadline,
     }
     if queue is not None:
         job["queueName"] = queue
     if best_effort is not None:
         job["bestEffort"] = int(best_effort)
     run_admission(db, job)  # raises AdmissionError on rejection
+    # re-validate after the rules ran: they may have rewritten the request —
+    # and refresh the legacy mirror columns from the (possibly rewritten)
+    # first alternative, so the stored row never contradicts resourceRequest.
+    # A rule that mangles job['request'] is an admission failure, not a
+    # crash: surface it as AdmissionError like any other rejection.
+    raw = job.get("request")
+    if not isinstance(raw, (list, tuple)) or not raw:
+        raise AdmissionError("admission rules left no request alternatives")
+    try:
+        alternatives = [ResourceRequest.from_dict(d) for d in raw]
+    except BadRequest as exc:
+        raise AdmissionError(
+            f"admission rules produced an invalid request: {exc}") from exc
+    first = alternatives[0]
+    job["nbNodes"] = first.min_hosts
+    job["weight"] = first.weight
+    job["properties"] = validate_properties(first.combined_filter)
     with db.transaction() as cur:
         cur.execute(
             "INSERT INTO jobs(jobType, infoType, user, nbNodes, weight, command,"
             " queueName, maxTime, properties, launchingDirectory, submissionTime,"
-            " reservation, reservationStart, bestEffort, message)"
-            " VALUES (?,?,?,?,?,?,?,?,?,?,?,?,?,?,?)",
+            " reservation, reservationStart, bestEffort, message, resourceRequest,"
+            " deadline)"
+            " VALUES (?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?)",
             (job["jobType"], job["infoType"], job["user"], job["nbNodes"],
              job["weight"], job["command"], job["queueName"], job["maxTime"],
-             job["properties"], job["launchingDirectory"], clock(),
+             job["properties"], job["launchingDirectory"], job["submissionTime"],
              job.get("reservation", "None"), job.get("reservationStart"),
-             job.get("bestEffort", 0), "submitted"))
+             job.get("bestEffort", 0), "submitted",
+             request_to_json(alternatives), job.get("deadline")))
         job_id = cur.lastrowid
     db.log_event("oarsub", "info", f"job {job_id} submitted by {user}", job_id)
     db.notify("submission")
     return job_id
 
 
+def _require_job(db, job_id: int):
+    state = db.scalar("SELECT state FROM jobs WHERE idJob=?", (job_id,))
+    if state is None:
+        raise UnknownJob(f"no such job {job_id}")
+    return state
+
+
 def oardel(db, job_id: int) -> None:
-    """Cancel a job: flag it; the generic cancellation module does the kill."""
+    """Cancel a job: flag it; the generic cancellation module does the kill.
+
+    Raises :class:`UnknownJob` for a nonexistent id and
+    :class:`InvalidStateTransition` for an already-finished job — the old
+    behaviour (0-row UPDATE + a notification anyway) reported success for
+    commands that did nothing.
+    """
+    state = _require_job(db, job_id)
+    if state in jobstate.FINAL_STATES:
+        raise InvalidStateTransition(
+            f"cannot cancel job {job_id}: already {state}")
     with db.transaction() as cur:
         cur.execute("UPDATE jobs SET toCancel=1 WHERE idJob=?", (job_id,))
     db.log_event("oardel", "info", "cancellation requested", job_id)
@@ -78,11 +183,19 @@ def oardel(db, job_id: int) -> None:
 
 
 def oarhold(db, job_id: int) -> None:
-    jobstate.set_state(db, job_id, jobstate.HOLD)
+    _require_job(db, job_id)
+    try:
+        jobstate.set_state(db, job_id, jobstate.HOLD)
+    except jobstate.IllegalTransition as exc:
+        raise InvalidStateTransition(str(exc)) from exc
 
 
 def oarresume(db, job_id: int) -> None:
-    jobstate.set_state(db, job_id, jobstate.WAITING)
+    _require_job(db, job_id)
+    try:
+        jobstate.set_state(db, job_id, jobstate.WAITING)
+    except jobstate.IllegalTransition as exc:
+        raise InvalidStateTransition(str(exc)) from exc
     db.notify("submission")
 
 
@@ -129,3 +242,167 @@ def remove_resources(db, hostnames: list[str]) -> None:
                     f"WHERE hostname IN ({qmarks})", hostnames)
     db.notify("monitor")
     db.notify("scheduler")
+
+
+# --------------------------------------------------------------------------
+# typed client facade
+# --------------------------------------------------------------------------
+@dataclass
+class JobRequest:
+    """The submission contract: what to run, on what shape, by when.
+
+    ``request`` is the resource-request language (string / parsed
+    alternatives); ``deadline`` is the Libra-style completion target —
+    validated at admission (rule 12: a deadline the walltime cannot meet is
+    rejected) and stored for deadline-aware policies to consume.
+    """
+    command: str | dict = ""
+    request: str | ResourceRequest | list[ResourceRequest] | None = None
+    queue: str | None = None
+    walltime: float = 3600.0
+    deadline: float | None = None
+    user: str = "user"
+    reservation_start: float | None = None
+    best_effort: bool | None = None
+    job_type: str = "PASSIVE"
+
+
+@dataclass(frozen=True)
+class JobInfo:
+    """Typed projection of a jobs-table row."""
+    id: int
+    state: str
+    user: str
+    queue: str
+    command: str
+    nb_nodes: int
+    weight: int
+    max_time: float
+    properties: str
+    best_effort: bool
+    submission_time: float
+    start_time: float | None
+    stop_time: float | None
+    message: str
+    reservation: str
+    reservation_start: float | None
+    deadline: float | None
+    request: tuple[ResourceRequest, ...] | None
+
+    @classmethod
+    def from_row(cls, row) -> "JobInfo":
+        raw = row["resourceRequest"]
+        return cls(
+            id=row["idJob"], state=row["state"], user=row["user"],
+            queue=row["queueName"], command=row["command"],
+            nb_nodes=row["nbNodes"], weight=row["weight"],
+            max_time=row["maxTime"], properties=row["properties"],
+            best_effort=bool(row["bestEffort"]),
+            submission_time=row["submissionTime"],
+            start_time=row["startTime"], stop_time=row["stopTime"],
+            message=row["message"], reservation=row["reservation"],
+            reservation_start=row["reservationStart"],
+            deadline=row["deadline"],
+            request=tuple(request_from_json(raw)) if raw else None)
+
+
+@dataclass(frozen=True)
+class NodeInfo:
+    """Typed projection of a resources-table row (+ live busy count)."""
+    id: int
+    hostname: str
+    state: str
+    weight: int
+    pod: int
+    switch: str
+    mem_gb: int
+    chip: str
+    busy: int
+
+    @classmethod
+    def from_row(cls, row) -> "NodeInfo":
+        return cls(id=row["idResource"], hostname=row["hostname"],
+                   state=row["state"], weight=row["weight"], pod=row["pod"],
+                   switch=row["switch"], mem_gb=row["mem_gb"],
+                   chip=row["chip"], busy=row["busy"])
+
+
+class ClusterClient:
+    """Typed facade over the command set — one handle, typed records in and
+    out, typed errors instead of silent no-ops.
+
+    >>> client = ClusterClient(db)
+    >>> info = client.submit(JobRequest("train.py",
+    ...                                 request="/pod=1/switch=1/host=4",
+    ...                                 walltime=3600.0))
+    >>> client.stat(info.id).state
+    'Waiting'
+    """
+
+    def __init__(self, db, *, clock=None):
+        self.db = db
+        self.clock = clock
+
+    # ------------------------------------------------------------- commands
+    def submit(self, req: JobRequest | str | dict, **overrides) -> JobInfo:
+        """Submit a JobRequest (or a bare command + keyword overrides)."""
+        if not isinstance(req, JobRequest):
+            req = JobRequest(command=req, **overrides)
+        elif overrides:
+            raise TypeError("pass overrides inside the JobRequest")
+        job_id = oarsub(
+            self.db, req.command, user=req.user, queue=req.queue,
+            max_time=req.walltime, request=req.request,
+            reservation_start=req.reservation_start, job_type=req.job_type,
+            best_effort=req.best_effort, deadline=req.deadline,
+            **({"clock": self.clock} if self.clock else {}))
+        return self.stat(job_id)
+
+    def cancel(self, job_id: int) -> None:
+        oardel(self.db, job_id)
+
+    def hold(self, job_id: int) -> None:
+        oarhold(self.db, job_id)
+
+    def resume(self, job_id: int) -> None:
+        oarresume(self.db, job_id)
+
+    # ------------------------------------------------------------ monitoring
+    def stat(self, job_id: int | None = None) -> JobInfo | list[JobInfo]:
+        """One typed record for a job id; all jobs when id is omitted."""
+        if job_id is None:
+            return [JobInfo.from_row(r)
+                    for r in self.db.query("SELECT * FROM jobs ORDER BY idJob")]
+        row = self.db.query_one("SELECT * FROM jobs WHERE idJob=?", (job_id,))
+        if row is None:
+            raise UnknownJob(f"no such job {job_id}")
+        return JobInfo.from_row(row)
+
+    def nodes(self) -> list[NodeInfo]:
+        return [NodeInfo.from_row(r) for r in self.db.query(
+            "SELECT r.*, (SELECT COUNT(*) FROM assignments a JOIN jobs j "
+            " ON j.idJob=a.idJob WHERE a.idResource=r.idResource AND "
+            " j.state IN ('toLaunch','Launching','Running')) AS busy "
+            "FROM resources r ORDER BY idResource")]
+
+    def assigned_nodes(self, job_id: int) -> list[NodeInfo]:
+        """The nodes a live job holds (empty once assignments are cleared)."""
+        _require_job(self.db, job_id)
+        return [NodeInfo.from_row(r) for r in self.db.query(
+            "SELECT r.*, (SELECT COUNT(*) FROM assignments a JOIN jobs j "
+            " ON j.idJob=a.idJob WHERE a.idResource=r.idResource AND "
+            " j.state IN ('toLaunch','Launching','Running')) AS busy "
+            "FROM resources r WHERE r.idResource IN "
+            " (SELECT idResource FROM assignments WHERE idJob=?) "
+            "ORDER BY r.idResource", (job_id,))]
+
+    # ------------------------------------------------------------ elasticity
+    def resize(self, add: list[str] | None = None,
+               remove: list[str] | None = None, **node_kw) -> list[int]:
+        """Grow and/or shrink the cluster; returns ids of added resources."""
+        ids: list[int] = []
+        if add:
+            ids = add_resources(self.db, add, **node_kw)
+        if remove:
+            remove_resources(self.db, remove)
+        return ids

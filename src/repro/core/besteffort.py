@@ -32,23 +32,30 @@ def resubmit_preempted(db, *, clock=None) -> list[int]:
         "SELECT * FROM jobs WHERE state='Error' AND bestEffort=1 "
         "AND message LIKE 'preempted:%' AND message NOT LIKE '%[resubmitted]' "
         "AND toCancel=0")
-    new_ids = []
+    if not rows:
+        return []
+    clones = [
+        (job["jobType"], job["infoType"], "Waiting", job["user"],
+         job["nbNodes"], job["weight"], job["command"], job["queueName"],
+         job["maxTime"], job["properties"], job["launchingDirectory"],
+         now, 1, job["checkpointPath"], job["resourceRequest"], job["deadline"],
+         f"resubmission of preempted job {job['idJob']}")
+        for job in rows]
     with db.transaction() as cur:
-        for job in rows:
-            cur.execute(
-                "INSERT INTO jobs(jobType, infoType, state, user, nbNodes, weight,"
-                " command, queueName, maxTime, properties, launchingDirectory,"
-                " submissionTime, bestEffort, checkpointPath, message)"
-                " VALUES (?,?,?,?,?,?,?,?,?,?,?,?,?,?,?)",
-                (job["jobType"], job["infoType"], "Waiting", job["user"],
-                 job["nbNodes"], job["weight"], job["command"], job["queueName"],
-                 job["maxTime"], job["properties"], job["launchingDirectory"],
-                 now, 1, job["checkpointPath"],
-                 f"resubmission of preempted job {job['idJob']}"))
-            new_ids.append(cur.lastrowid)
-            # mark the ancestor so we do not clone it twice
-            cur.execute("UPDATE jobs SET message = message || ' [resubmitted]' "
-                        "WHERE idJob=?", (job["idJob"],))
-    if new_ids:
-        db.notify("scheduler")
+        # batched (executemany) instead of row-at-a-time: one statement for
+        # all clones, one for all ancestor marks. Clone ids are recovered
+        # from MAX(idJob): AUTOINCREMENT ids are monotone and the handle's
+        # writer lock means nothing else inserts inside this transaction.
+        cur.executemany(
+            "INSERT INTO jobs(jobType, infoType, state, user, nbNodes, weight,"
+            " command, queueName, maxTime, properties, launchingDirectory,"
+            " submissionTime, bestEffort, checkpointPath, resourceRequest,"
+            " deadline, message)"
+            " VALUES (?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?)", clones)
+        top = cur.execute("SELECT MAX(idJob) FROM jobs").fetchone()[0]
+        new_ids = list(range(top - len(clones) + 1, top + 1))
+        # mark the ancestors so we do not clone them twice
+        cur.executemany("UPDATE jobs SET message = message || ' [resubmitted]' "
+                        "WHERE idJob=?", [(job["idJob"],) for job in rows])
+    db.notify("scheduler")
     return new_ids

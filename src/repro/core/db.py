@@ -199,7 +199,9 @@ def connect(path: str = ":memory:", *, fresh: bool = False) -> Database:
         db.create_schema()
     else:
         # the DDL is IF NOT EXISTS throughout: re-applying indexes on reopen
-        # upgrades databases created before an index was added
+        # upgrades databases created before an index was added; column
+        # migrations (resourceRequest, deadline) are applied the same way
+        schema.apply_migrations(db)
         with db.transaction() as cur:
             for ddl in schema.ALL_INDEXES:
                 cur.execute(ddl)

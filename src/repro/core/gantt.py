@@ -208,14 +208,40 @@ class Gantt:
         chosen resources are bitmasks over :attr:`index`."""
         if count <= 0:
             return (after if after is not None else self.origin, 0)
+
+        def selector(avail: int) -> int:
+            if avail.bit_count() < count:
+                return 0
+            return _choose_mask(avail, count, prefer_bits)
+
+        return self.find_slot_select(candidates, duration, selector,
+                                     after, exact_start=exact_start)
+
+    def find_slot_select(
+        self,
+        candidates: int,
+        duration: float,
+        selector,
+        after: float | None = None,
+        *,
+        exact_start: float | None = None,
+    ) -> tuple[float, int] | None:
+        """Earliest start where ``selector(avail)`` accepts the free mask.
+
+        ``selector`` maps the candidates free over the whole window to the
+        chosen resource mask, or 0 to reject — the generalisation the
+        hierarchical request language compiles onto (pick N hosts under one
+        switch, whole blocks, …); :meth:`find_slot_mask` is the plain
+        count-based instance. The sweep is the same sliding-window AND either
+        way; ``selector`` is consulted once per candidate start.
+        """
         after = self.origin if after is None else max(after, self.origin)
         if after == INF:
             return None  # no finite start exists (reference: empty window)
         if exact_start is not None:
             avail = self._window_free(exact_start, exact_start + duration, candidates)
-            if avail.bit_count() >= count:
-                return exact_start, _choose_mask(avail, count, prefer_bits)
-            return None
+            chosen = selector(avail)
+            return (exact_start, chosen) if chosen else None
         # One sweep: candidate starts are `after` plus every later slot
         # boundary; the window intersection slides right with them. The
         # sliding AND holds exactly the slots [lo, j] (empty when j < lo).
@@ -236,9 +262,9 @@ class Gantt:
                 lo += 1
             if j < i:
                 continue  # degenerate window (duration <= 0): nothing covered
-            avail = candidates & win.value()
-            if avail.bit_count() >= count:
-                return t, _choose_mask(avail, count, prefer_bits)
+            chosen = selector(candidates & win.value())
+            if chosen:
+                return t, chosen
         return None
 
     def _window_free(self, start: float, stop: float, candidates: int) -> int:

@@ -1,4 +1,4 @@
-"""Resource matching — §2.3.
+"""Resource matching — §2.3, plus the request-compilation step.
 
 "resources required by jobs are matched with available ones as a user might
 need nodes with special properties (like single switch interconnection, or a
@@ -6,13 +6,26 @@ mandatory quantity of RAM)". The job's ``properties`` column is an SQL
 boolean expression evaluated directly against the ``resources`` table —
 "the rich expressive power of sql queries" is the matching engine, which is
 the whole point of putting a relational DB at the centre.
+
+The typed request model (:mod:`repro.core.request`) compiles here: each
+moldable alternative becomes a :class:`CompiledAlternative` — a candidate
+bitmask (the SQL filter, memoised per pass), a locality preference order,
+and for hierarchical requests a *selector* closure that picks e.g. 4 hosts
+under 1 switch by AND-ing per-level block masks from a
+:class:`~repro.core.resourceindex.HierarchyIndex`. The selector plugs into
+``Gantt.find_slot_select``, replacing the old flat ``ORDER BY pod, switch``
+locality *heuristic* with an actual placement *constraint*; a plain
+``/host=N`` alternative compiles to no selector at all and schedules through
+the identical legacy ``find_slot_mask`` path.
 """
 
 from __future__ import annotations
 
 import re
 
-__all__ = ["match_resources", "validate_properties", "BadProperties"]
+__all__ = ["match_resources", "validate_properties", "BadProperties",
+           "CompiledAlternative", "compile_alternatives",
+           "select_hierarchical"]
 
 
 class BadProperties(ValueError):
@@ -54,3 +67,113 @@ def match_resources(db, properties: str, *, min_weight: int = 1,
     except Exception as exc:
         raise BadProperties(f"properties expression failed: {expr!r}: {exc}") from exc
     return [r["idResource"] for r in rows]
+
+
+# --------------------------------------------------------------------------
+# request compilation — ResourceRequest -> per-pass masks + selector
+# --------------------------------------------------------------------------
+class CompiledAlternative:
+    """One moldable alternative, compiled against a pass's resource index.
+
+    ``selector is None`` marks the flat ``/host=N`` shape: the caller must
+    use ``Gantt.find_slot_mask(candidates, count, …, prefer_bits=…)`` — the
+    byte-identical legacy path. Otherwise ``selector(avail) -> chosen_mask``
+    enforces the hierarchy and plugs into ``Gantt.find_slot_select``.
+    ``walltime`` is the per-alternative override (None = job's maxTime);
+    ``min_hosts`` is the lower bound used by the preemption deficit logic.
+    """
+
+    __slots__ = ("candidates", "prefer_bits", "selector", "count",
+                 "weight", "walltime", "min_hosts")
+
+    def __init__(self, candidates: int, prefer_bits: list[int], selector,
+                 count: int, weight: int, walltime: float | None,
+                 min_hosts: int):
+        self.candidates = candidates
+        self.prefer_bits = prefer_bits
+        self.selector = selector
+        self.count = count
+        self.weight = weight
+        self.walltime = walltime
+        self.min_hosts = min_hosts
+
+
+def select_hierarchical(avail: int, candidates: int,
+                        levels: list[tuple[list[int] | None, int | None]]) -> int:
+    """Pick resources satisfying a hierarchical requirement, or 0.
+
+    ``levels`` is the compiled requirement: one ``(block_masks, count)``
+    entry per request level, outermost first; the leaf (host) entry carries
+    ``block_masks=None`` and ``count=None`` for ALL. ``avail`` is the free
+    candidate mask over the window, ``candidates`` the full candidate mask
+    (needed so ALL can demand *every* matching host of a block, busy or not).
+
+    Mask transliteration of OAR's ``find_resource_hierarchies_scattered``:
+    at each level, walk blocks in locality order and recurse into the first
+    ``count`` blocks whose subtree satisfies the remaining levels.
+    """
+    return _select(avail, candidates, levels, 0)
+
+
+def _select(avail: int, cand: int,
+            levels: list[tuple[list[int] | None, int | None]], i: int) -> int:
+    blocks, count = levels[i]
+    if blocks is None:                        # host leaf
+        if count is None:                     # ALL: whole block, all free
+            return avail if (avail and avail == cand) else 0
+        if avail.bit_count() < count:
+            return 0
+        chosen, n = 0, 0
+        while n < count:                      # lowest bits = ascending rid,
+            lsb = avail & -avail              # the locality-ordered choice
+            chosen |= lsb
+            avail ^= lsb
+            n += 1
+        return chosen
+    chosen, got = 0, 0
+    for b in blocks:
+        sub = avail & b
+        if not sub:
+            continue
+        r = _select(sub, cand & b, levels, i + 1)
+        if r:
+            chosen |= r
+            got += 1
+            if got == count:
+                return chosen
+    return 0
+
+
+def compile_alternatives(alternatives, candidates_fn, hierarchy_fn) -> list[CompiledAlternative]:
+    """Compile parsed :class:`~repro.core.request.ResourceRequest`
+    alternatives against one scheduling pass.
+
+    ``candidates_fn(properties, min_weight) -> (mask, prefer_bits)`` is the
+    pass's memoised matcher (PassCache.candidates); ``hierarchy_fn()`` lazily
+    yields the pass's :class:`~repro.core.resourceindex.HierarchyIndex`
+    (only hierarchical alternatives pay for it). Raises BadProperties for
+    unmatchable filters — the caller flags the job exactly as it does for a
+    bad legacy ``properties`` string.
+    """
+    out: list[CompiledAlternative] = []
+    for alt in alternatives:
+        mask, prefer_bits = candidates_fn(alt.combined_filter, alt.weight)
+        if alt.is_flat:
+            out.append(CompiledAlternative(
+                mask, prefer_bits, None, alt.levels[0].count, alt.weight,
+                alt.walltime, alt.min_hosts))
+            continue
+        hierarchy = hierarchy_fn()
+        levels: list[tuple[list[int] | None, int | None]] = []
+        for lvl in alt.levels[:-1]:
+            levels.append((hierarchy.blocks(lvl.level), lvl.count))
+        leaf = alt.levels[-1]
+        levels.append((None, leaf.count))
+
+        def selector(avail: int, _cand=mask, _levels=tuple(levels)) -> int:
+            return select_hierarchical(avail, _cand, _levels)
+
+        out.append(CompiledAlternative(
+            mask, prefer_bits, selector, leaf.count or 0, alt.weight,
+            alt.walltime, alt.min_hosts))
+    return out

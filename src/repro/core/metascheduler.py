@@ -19,7 +19,11 @@ statelessness is preserved. It memoises ``match_resources`` by
 expression instead of one per job — converts each distinct candidate list to
 a bitmask + preference bit order over the pass's ResourceIndex exactly once,
 caches the alive-resource set, and loads every running best-effort job's
-assignment in one grouped query. Writes are batched (``executemany`` for
+assignment in one grouped query. Typed requests (``jobs.resourceRequest``)
+are compiled once per distinct canonical JSON: per-level block masks come
+from a lazily-built :class:`~repro.core.resourceindex.HierarchyIndex`, and
+moldable alternatives are tried in declared order at placement time
+(:func:`repro.core.policies.find_fit`). Writes are batched (``executemany`` for
 assignment/gantt inserts, one transaction for preemption flags). The pass's
 hot predicates are covered by indexes declared in ``schema.py``.
 """
@@ -30,9 +34,11 @@ import time as _time
 
 from repro.core import jobstate
 from repro.core.gantt import EPS, Gantt
-from repro.core.matching import BadProperties, match_resources
-from repro.core.policies import JobView, Placement, get_policy
-from repro.core.resourceindex import ResourceIndex
+from repro.core.matching import (BadProperties, compile_alternatives,
+                                 match_resources)
+from repro.core.policies import JobView, Placement, find_fit, get_policy
+from repro.core.request import BadRequest, request_from_json
+from repro.core.resourceindex import HierarchyIndex, ResourceIndex
 
 __all__ = ["MetaScheduler", "PassCache"]
 
@@ -50,6 +56,9 @@ class PassCache:
         self.index = index
         # (properties, min_weight) -> (mask, prefer_bits) | BadProperties
         self._matches: dict[tuple[str, int], tuple[int, list[int]] | BadProperties] = {}
+        # canonical resourceRequest JSON -> [CompiledAlternative] | error
+        self._compiled: dict[str, list | Exception] = {}
+        self._hierarchy: HierarchyIndex | None = None
 
     def candidates(self, properties: str, min_weight: int) -> tuple[int, list[int]]:
         """Matched resources as (bitmask, preference bit order); raises
@@ -65,6 +74,34 @@ class PassCache:
                 hit = exc
             self._matches[key] = hit
         if isinstance(hit, BadProperties):
+            raise hit
+        return hit
+
+    def hierarchy(self) -> HierarchyIndex:
+        """Per-level block masks (pod→mask, (pod,switch)→mask), built lazily
+        once per pass — only passes that see a hierarchical request pay the
+        topology query."""
+        if self._hierarchy is None:
+            self._hierarchy = HierarchyIndex(
+                self.index,
+                ((r["idResource"], r["pod"], r["switch"]) for r in self.db.query(
+                    "SELECT idResource, pod, switch FROM resources "
+                    "WHERE state='Alive'")))
+        return self._hierarchy
+
+    def compiled(self, request_json: str) -> list:
+        """Compiled alternatives for a canonical resourceRequest JSON string
+        (memoised per distinct request, like :meth:`candidates` — errors are
+        memoised too and re-raised per job carrying the bad request)."""
+        hit = self._compiled.get(request_json)
+        if hit is None:
+            try:
+                hit = compile_alternatives(request_from_json(request_json),
+                                           self.candidates, self.hierarchy)
+            except (BadRequest, BadProperties) as exc:
+                hit = exc
+            self._compiled[request_json] = hit
+        if isinstance(hit, Exception):
             raise hit
         return hit
 
@@ -156,18 +193,20 @@ class MetaScheduler:
         for job in rows:
             start_req = job["reservationStart"]
             try:
-                cands, _ = cache.candidates(job["properties"], job["weight"])
-            except BadProperties as exc:
+                view = self._view(job, cache)
+            except (BadProperties, BadRequest) as exc:
                 self._to_error(job["idJob"], str(exc), now)
                 continue
-            fit = gantt.find_slot_mask(cands, job["nbNodes"], job["maxTime"],
-                                       exact_start=max(start_req, now))
+            # legacy behaviour kept: reservations choose by ascending id,
+            # not by the locality preference order (use_prefer=False)
+            fit = find_fit(gantt, view, None,
+                           exact_start=max(start_req, now), use_prefer=False)
             if fit is None:
                 self._to_error(job["idJob"],
                                "reservation slot unavailable", now)
                 continue
-            start, chosen = fit
-            gantt.occupy(chosen, start, start + job["maxTime"])
+            start, chosen, walltime, override = fit
+            gantt.occupy(chosen, start, start + walltime)
             # negotiation: Waiting -> toAckReservation -> (ack) -> Waiting,
             # with reservation substate moved to 'Scheduled' and the slot
             # persisted in the gantt table.
@@ -176,12 +215,15 @@ class MetaScheduler:
                 cur.executemany(
                     "INSERT INTO gantt(idJob, idResource, startTime, stopTime) "
                     "VALUES (?,?,?,?)",
-                    [(job["idJob"], rid, start, start + job["maxTime"])
+                    [(job["idJob"], rid, start, start + walltime)
                      for rid in gantt.index.iter_rids(chosen)])
                 cur.execute(
                     "UPDATE jobs SET reservation='Scheduled', reservationStart=?, "
                     "message=? WHERE idJob=?",
                     (start, f"reservation granted at {start:.3f}", job["idJob"]))
+                if override is not None:  # moldable alternative's walltime won
+                    cur.execute("UPDATE jobs SET maxTime=? WHERE idJob=?",
+                                (override, job["idJob"]))
             jobstate.set_state(self.db, job["idJob"], jobstate.WAITING)
             summary["reservations"].append((job["idJob"], start))
         # fire reservations whose time has come
@@ -201,21 +243,32 @@ class MetaScheduler:
             summary["launched"].append(job["idJob"])
 
     # -------------------------------------------------------------- queues
+    def _view(self, job, cache: PassCache) -> JobView:
+        """Jobs-table row -> JobView: compile the typed request when present
+        (moldable alternatives); rows predating the request column schedule
+        through the legacy flat path. Raises BadRequest/BadProperties."""
+        request_json = job["resourceRequest"]
+        alternatives = cache.compiled(request_json) if request_json else None
+        if alternatives is not None:
+            first = alternatives[0]
+            cands, prefer_bits = first.candidates, first.prefer_bits
+        else:
+            cands, prefer_bits = cache.candidates(job["properties"], job["weight"])
+        return JobView(
+            idJob=job["idJob"], nbNodes=job["nbNodes"], weight=job["weight"],
+            maxTime=job["maxTime"], submissionTime=job["submissionTime"],
+            candidates=cands, prefer=prefer_bits,
+            bestEffort=bool(job["bestEffort"]), alternatives=alternatives)
+
     def _queue_jobs(self, queue: str, cache: PassCache) -> list[JobView]:
         views = []
         for job in self.db.query(
                 "SELECT * FROM jobs WHERE state='Waiting' AND reservation='None' "
                 "AND queueName=? ORDER BY idJob", (queue,)):
             try:
-                cands, prefer_bits = cache.candidates(job["properties"], job["weight"])
-            except BadProperties as exc:
+                views.append(self._view(job, cache))
+            except (BadProperties, BadRequest) as exc:
                 self._to_error(job["idJob"], str(exc), self.clock())
-                continue
-            views.append(JobView(
-                idJob=job["idJob"], nbNodes=job["nbNodes"], weight=job["weight"],
-                maxTime=job["maxTime"], submissionTime=job["submissionTime"],
-                candidates=cands, prefer=prefer_bits,
-                bestEffort=bool(job["bestEffort"])))
         return views
 
     def _schedule_queues(self, gantt: Gantt, cache: PassCache, now: float,
@@ -235,6 +288,13 @@ class MetaScheduler:
     def _launch_due(self, placements: list[Placement], now: float, summary: dict) -> None:
         for p in placements:
             if p.starts_now(now):
+                if p.walltime is not None:
+                    # a moldable alternative's walltime won over the stored
+                    # maxTime — persist before launch so monitoring enforces
+                    # the walltime actually planned
+                    with self.db.transaction() as cur:
+                        cur.execute("UPDATE jobs SET maxTime=? WHERE idJob=?",
+                                    (p.walltime, p.idJob))
                 self._assign_and_mark(p.idJob, p.resources)
                 summary["launched"].append(p.idJob)
 
@@ -245,6 +305,18 @@ class MetaScheduler:
         jobs whose resources are needed; the generic cancellation module acts
         on the flags; the waiting job is scheduled "when coming back to the
         scheduler" (i.e. on a later pass, once resources are actually free).
+
+        Typed-request jobs: submission mirrors the first alternative into
+        the legacy columns (nbNodes = its host floor, properties = its
+        combined filter, weight = its chip floor), so the deficit arithmetic
+        below reads the same numbers the compiled path schedules with. The
+        host count is an approximation for hierarchical shapes, so before
+        flagging victims for such a job we check *structural* satisfiability:
+        even reclaiming every running best-effort resource must be able to
+        satisfy some alternative's block constraint — otherwise killing buys
+        nothing and the job would drive an endless preempt/resubmit cycle
+        (e.g. ``/switch=1/host=12`` on 8-host switches passes the cluster-
+        wide admission cap but can never place).
         """
         started = {p.idJob for p in placements if p.starts_now(now)}
         blocked = [j for j in self.db.query(
@@ -276,6 +348,9 @@ class MetaScheduler:
             deficit = need - (free_now & cands).bit_count()
             if deficit <= 0:
                 continue  # will launch on the next pass anyway
+            if j["resourceRequest"] and not self._preemption_can_satisfy(
+                    j["resourceRequest"], cache, free_now, victims, victim_masks):
+                continue  # structurally unsatisfiable: don't kill for nothing
             reclaimable = 0
             chosen = []
             for v in victims:
@@ -298,6 +373,30 @@ class MetaScheduler:
             self.db.notify("cancel")
 
     # -------------------------------------------------------------- helpers
+    @staticmethod
+    def _preemption_can_satisfy(request_json: str, cache: PassCache,
+                                free_now: int, victims, victim_masks) -> bool:
+        """Upper-bound satisfiability check for a typed request: could ANY
+        alternative place if every remaining best-effort victim were
+        reclaimed on top of what is free now? (Instantaneous masks only —
+        an optimistic bound, which is all preemption needs: a False here is
+        a proof that flagging victims cannot help.)"""
+        try:
+            alternatives = cache.compiled(request_json)
+        except (BadRequest, BadProperties):
+            return False
+        potential = free_now
+        for v in victims:
+            potential |= victim_masks.get(v["idJob"], 0)
+        for alt in alternatives:
+            avail = potential & alt.candidates
+            if alt.selector is None:
+                if avail.bit_count() >= alt.count:
+                    return True
+            elif alt.selector(avail):
+                return True
+        return False
+
     def _free_now_mask(self, index: ResourceIndex) -> int:
         busy = {r["idResource"] for r in self.db.query(
             "SELECT a.idResource FROM assignments a JOIN jobs j ON j.idJob=a.idJob "

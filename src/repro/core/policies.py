@@ -45,7 +45,8 @@ from dataclasses import dataclass, field
 
 from repro.core.gantt import EPS, Gantt, ResourceIndex
 
-__all__ = ["JobView", "Placement", "POLICIES", "register_policy", "get_policy"]
+__all__ = ["JobView", "Placement", "POLICIES", "register_policy",
+           "get_policy", "find_fit"]
 
 
 @dataclass
@@ -56,6 +57,12 @@ class JobView:
     bitmask over the scheduling pass's ResourceIndex; ``prefer`` is the
     placement order (locality) in the matching representation — resource ids
     for the set form, bit positions for the mask form.
+
+    ``alternatives`` carries the compiled typed request (ordered
+    :class:`~repro.core.matching.CompiledAlternative` list) when the job was
+    submitted through the request language; the first *satisfiable*
+    alternative wins (moldable semantics). ``None`` means the legacy flat
+    path: place ``nbNodes`` hosts from ``candidates``.
     """
     idJob: int
     nbNodes: int
@@ -65,6 +72,7 @@ class JobView:
     candidates: set[int] | int = field(default_factory=set)
     prefer: list[int] | None = None
     bestEffort: bool = False
+    alternatives: list | None = None
 
     @property
     def procs(self) -> int:
@@ -84,16 +92,20 @@ class Placement:
 
     Stores the chosen resources as a bitmask when built by the mask-native
     policies; ``resources`` decodes (and caches) the ``set`` view for
-    persistence and tests.
+    persistence and tests. ``walltime`` is set only when a moldable
+    alternative overrode the job's stored ``maxTime`` — the meta-scheduler
+    persists the override when it launches the job.
     """
 
-    __slots__ = ("idJob", "start", "index", "_mask", "_set")
+    __slots__ = ("idJob", "start", "index", "walltime", "_mask", "_set")
 
     def __init__(self, idJob: int, start: float, resources,
-                 index: ResourceIndex | None = None):
+                 index: ResourceIndex | None = None,
+                 walltime: float | None = None):
         self.idJob = idJob
         self.start = start
         self.index = index
+        self.walltime = walltime
         if isinstance(resources, int):
             self._mask, self._set = resources, None
         else:
@@ -110,6 +122,44 @@ class Placement:
 
     def __repr__(self):  # pragma: no cover - debug aid
         return f"Placement(idJob={self.idJob}, start={self.start}, resources={self.resources})"
+
+
+def find_fit(gantt: Gantt, job: JobView, after: float | None, *,
+             exact_start: float | None = None, use_prefer: bool = True
+             ) -> tuple[float, int, float, float | None] | None:
+    """Earliest fit for a job, honouring moldable alternatives.
+
+    Alternatives are tried in declared order and the first *satisfiable* one
+    wins — even if a later alternative could start earlier (the contract the
+    request language documents). Returns ``(start, chosen_mask, walltime,
+    override)`` where ``walltime`` is the duration actually planned and
+    ``override`` is non-None only when it differs from the job's stored
+    maxTime. ``use_prefer=False`` reproduces the legacy reservation path,
+    which picks by ascending resource id.
+    """
+    if job.alternatives:
+        for alt in job.alternatives:
+            wt = alt.walltime if alt.walltime is not None else job.maxTime
+            if alt.selector is None:
+                fit = gantt.find_slot_mask(
+                    alt.candidates, alt.count, wt, after=after,
+                    exact_start=exact_start,
+                    prefer_bits=alt.prefer_bits if use_prefer else None)
+            else:
+                fit = gantt.find_slot_select(alt.candidates, wt, alt.selector,
+                                             after=after,
+                                             exact_start=exact_start)
+            if fit is not None:
+                override = wt if wt != job.maxTime else None
+                return fit[0], fit[1], wt, override
+        return None
+    cand, prefer_bits = job.mask_and_prefer(gantt.index)
+    fit = gantt.find_slot_mask(cand, job.nbNodes, job.maxTime, after=after,
+                               exact_start=exact_start,
+                               prefer_bits=prefer_bits if use_prefer else None)
+    if fit is None:
+        return None
+    return fit[0], fit[1], job.maxTime, None
 
 
 PolicyFn = "callable[[Gantt, list[JobView], float], list[Placement]]"
@@ -140,15 +190,13 @@ def _place_conservative(gantt: Gantt, ordered: list[JobView], now: float,
     floor = now
     index = gantt.index
     for job in ordered:
-        cand, prefer_bits = job.mask_and_prefer(index)
-        fit = gantt.find_slot_mask(cand, job.nbNodes, job.maxTime,
-                                   after=floor if chain else now,
-                                   prefer_bits=prefer_bits)
+        fit = find_fit(gantt, job, floor if chain else now)
         if fit is None:
             continue  # never fits (bad properties); meta-scheduler flags it
-        start, chosen = fit
-        gantt.occupy(chosen, start, start + job.maxTime)
-        out.append(Placement(job.idJob, start, chosen, index=index))
+        start, chosen, walltime, override = fit
+        gantt.occupy(chosen, start, start + walltime)
+        out.append(Placement(job.idJob, start, chosen, index=index,
+                             walltime=override))
         if chain:
             floor = max(floor, start)
     return out
@@ -189,25 +237,26 @@ def easy_backfill(gantt: Gantt, jobs: list[JobView], now: float) -> list[Placeme
     head_planned = False
     index = gantt.index
     for job in ordered:
-        cand, prefer_bits = job.mask_and_prefer(index)
-        fit = gantt.find_slot_mask(cand, job.nbNodes, job.maxTime,
-                                   after=now, prefer_bits=prefer_bits)
+        fit = find_fit(gantt, job, now)
         if fit is None:
             continue
-        start, chosen = fit
+        start, chosen, walltime, override = fit
         if start <= now + EPS:
-            gantt.occupy(chosen, start, start + job.maxTime)
-            out.append(Placement(job.idJob, start, chosen, index=index))
+            gantt.occupy(chosen, start, start + walltime)
+            out.append(Placement(job.idJob, start, chosen, index=index,
+                                 walltime=override))
         elif not head_planned:
             # first job that cannot run now gets the (only) reservation
-            gantt.occupy(chosen, start, start + job.maxTime)
-            out.append(Placement(job.idJob, start, chosen, index=index))
+            gantt.occupy(chosen, start, start + walltime)
+            out.append(Placement(job.idJob, start, chosen, index=index,
+                                 walltime=override))
             head_start, head_planned = start, True
         else:
             # aggressive: no guarantee — only placed if it starts immediately
             # (checked above); a job that would start after `now` but before
             # the head's reservation is fine too:
-            if start + job.maxTime <= head_start + EPS:
-                gantt.occupy(chosen, start, start + job.maxTime)
-                out.append(Placement(job.idJob, start, chosen, index=index))
+            if start + walltime <= head_start + EPS:
+                gantt.occupy(chosen, start, start + walltime)
+                out.append(Placement(job.idJob, start, chosen, index=index,
+                                     walltime=override))
     return out

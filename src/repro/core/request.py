@@ -1,0 +1,324 @@
+"""Typed submission requests — the hierarchical resource-request language.
+
+The paper's §2.1 interface carries a flat ``nbNodes`` + ``weight`` + raw SQL
+``properties`` string, but its own motivating example ("single switch
+interconnection, or a mandatory quantity of RAM") is hierarchical. This
+module is the typed request model the rest of the system compiles: a user
+asks for *counts over the resource hierarchy* (``pod > switch > host``)
+instead of a bare node count, and may offer *moldable* alternatives that the
+scheduler tries in declared order (first satisfiable wins — the OAR 2.x
+``-l`` idiom).
+
+Grammar (one request string)::
+
+    request      :=  alternative ( '|' alternative )*
+    alternative  :=  term+ option*
+    term         :=  '/' level '=' count [ '{' filter '}' ]
+    option       :=  ',' key '=' number          # key: 'weight' | 'walltime'
+    level        :=  'pod' | 'switch' | 'host'
+    count        :=  positive integer | 'ALL'    # ALL: host level only
+
+Levels must appear in hierarchy order and at most once; a request that stops
+above ``host`` gets an implicit ``/host=ALL`` (whole blocks). A ``{filter}``
+is a SQL boolean expression over the ``resources`` table columns (validated
+by :func:`repro.core.matching.validate_properties`); filters from every
+level are AND-ed into the candidate set.
+
+Examples::
+
+    /host=4                                   four hosts, anywhere
+    /switch=1/host=4                          four hosts under ONE switch
+    /pod=2/switch=1/host=4, weight=2          2 pods × 1 switch × 4 hosts,
+                                              2 chips per host
+    /switch=2                                 two whole switches
+    /host=8{mem_gb >= 32}, walltime=3600      property filter + walltime
+    /switch=1/host=8 | /pod=1/host=8          moldable: single-switch if
+                                              satisfiable, else single-pod
+
+The parsed form is an ordered list of :class:`ResourceRequest` (one per
+alternative), serialised to a canonical JSON document stored in the
+``jobs.resourceRequest`` column — the submission contract the scheduler,
+admission rules and clients all share.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+from repro.core.matching import validate_properties
+
+__all__ = [
+    "HIERARCHY", "BadRequest", "LevelRequest", "ResourceRequest",
+    "parse_request", "request_to_json", "request_from_json",
+    "canonical_request",
+]
+
+# The resource hierarchy, outermost first. ``host`` is the leaf: one row of
+# the ``resources`` table. (``pod``/``switch`` are that row's columns.)
+HIERARCHY: tuple[str, ...] = ("pod", "switch", "host")
+
+
+class BadRequest(ValueError):
+    """Malformed or invalid resource request."""
+
+
+@dataclass(frozen=True)
+class LevelRequest:
+    """One ``/level=count{filter}`` term.
+
+    ``count is None`` encodes ``ALL`` (every matching host of the enclosing
+    block — only meaningful at the ``host`` leaf).
+    """
+    level: str
+    count: int | None
+    filter: str = ""
+
+    def to_dict(self) -> dict:
+        return {"level": self.level, "count": self.count, "filter": self.filter}
+
+
+@dataclass(frozen=True)
+class ResourceRequest:
+    """One moldable alternative: level counts + per-submission scalars.
+
+    ``weight`` is the per-host chip floor (the legacy ``weight`` column);
+    ``walltime`` overrides the job's ``maxTime`` when this alternative is the
+    one placed (``None`` = inherit the job's walltime).
+    """
+    levels: tuple[LevelRequest, ...] = field(default_factory=tuple)
+    weight: int = 1
+    walltime: float | None = None
+
+    # ------------------------------------------------------------- derived
+    @property
+    def min_hosts(self) -> int:
+        """Lower bound on hosts this alternative consumes (ALL counts as 1)."""
+        n = 1
+        for lvl in self.levels:
+            n *= lvl.count if lvl.count is not None else 1
+        return n
+
+    @property
+    def host_count(self) -> int | None:
+        """The leaf count (None == ALL)."""
+        return self.levels[-1].count
+
+    @property
+    def is_flat(self) -> bool:
+        """True when this is a plain ``/host=N`` request — the legacy shape
+        that must schedule byte-identically to the pre-request code."""
+        return len(self.levels) == 1 and self.levels[0].count is not None
+
+    @property
+    def combined_filter(self) -> str:
+        """AND of every level filter (a single filter passes verbatim, so a
+        legacy ``properties`` string keeps its exact SQL and cache key)."""
+        filters = [lvl.filter for lvl in self.levels if lvl.filter]
+        if not filters:
+            return ""
+        if len(filters) == 1:
+            return filters[0]
+        return " AND ".join(f"({f})" for f in filters)
+
+    # --------------------------------------------------------- constructors
+    @classmethod
+    def from_legacy(cls, nb_nodes: int, weight: int = 1,
+                    properties: str = "") -> "ResourceRequest":
+        """The shim the old ``oarsub(nb_nodes=, weight=)`` interface builds."""
+        if nb_nodes < 1:
+            raise BadRequest(f"nb_nodes must be >= 1, got {nb_nodes}")
+        if weight < 1:
+            raise BadRequest(f"weight must be >= 1, got {weight}")
+        return cls(levels=(LevelRequest("host", int(nb_nodes),
+                                        validate_properties(properties)),),
+                   weight=int(weight))
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ResourceRequest":
+        if not isinstance(d, dict):
+            raise BadRequest(f"alternative must be a dict, got {type(d).__name__}")
+        raw_levels = d.get("levels")
+        if not raw_levels:
+            raise BadRequest("alternative has no levels")
+        levels = []
+        for item in raw_levels:
+            if not isinstance(item, dict) or "level" not in item:
+                raise BadRequest(f"malformed level entry: {item!r}")
+            count = item.get("count")
+            if count is not None:
+                if not isinstance(count, int) or isinstance(count, bool) or count < 1:
+                    raise BadRequest(f"level count must be a positive int or "
+                                     f"ALL, got {count!r}")
+            levels.append(LevelRequest(str(item["level"]), count,
+                                       validate_properties(item.get("filter", ""))))
+        weight = d.get("weight", 1)
+        if not isinstance(weight, int) or isinstance(weight, bool) or weight < 1:
+            raise BadRequest(f"weight must be a positive int, got {weight!r}")
+        walltime = d.get("walltime")
+        if walltime is not None:
+            try:
+                walltime = float(walltime)
+            except (TypeError, ValueError):
+                raise BadRequest(f"walltime must be a number, got {walltime!r}")
+            if walltime <= 0:
+                raise BadRequest(f"walltime must be > 0, got {walltime}")
+        req = cls(levels=tuple(levels), weight=weight, walltime=walltime)
+        _check_levels(req.levels)
+        return req
+
+    def to_dict(self) -> dict:
+        d: dict = {"levels": [lvl.to_dict() for lvl in self.levels],
+                   "weight": self.weight}
+        if self.walltime is not None:
+            d["walltime"] = self.walltime
+        return d
+
+    # ------------------------------------------------------------ rendering
+    def render(self) -> str:
+        parts = []
+        for lvl in self.levels:
+            count = "ALL" if lvl.count is None else str(lvl.count)
+            filt = f"{{{lvl.filter}}}" if lvl.filter else ""
+            parts.append(f"/{lvl.level}={count}{filt}")
+        s = "".join(parts)
+        if self.weight != 1:
+            s += f", weight={self.weight}"
+        if self.walltime is not None:
+            s += f", walltime={self.walltime:g}"
+        return s
+
+
+def _check_levels(levels: tuple[LevelRequest, ...]) -> None:
+    """Hierarchy-order, no-duplicate, ALL-at-leaf-only validation."""
+    if not levels:
+        raise BadRequest("request has no levels")
+    ranks = []
+    for lvl in levels:
+        if lvl.level not in HIERARCHY:
+            raise BadRequest(f"unknown hierarchy level {lvl.level!r}; "
+                             f"have {'/'.join(HIERARCHY)}")
+        ranks.append(HIERARCHY.index(lvl.level))
+    if len(set(ranks)) != len(ranks):
+        raise BadRequest(f"duplicate hierarchy level in request: "
+                         f"{[lvl.level for lvl in levels]}")
+    if ranks != sorted(ranks):
+        raise BadRequest(f"levels must follow the hierarchy order "
+                         f"{' > '.join(HIERARCHY)}: "
+                         f"{[lvl.level for lvl in levels]}")
+    for lvl in levels[:-1]:
+        if lvl.count is None:
+            raise BadRequest(f"ALL is only allowed at the leaf "
+                             f"({HIERARCHY[-1]}) level, not {lvl.level!r}")
+    if levels[-1].level != HIERARCHY[-1]:
+        raise BadRequest(f"request must end at the {HIERARCHY[-1]!r} level "
+                         f"(or omit it for whole blocks)")
+
+
+_TERM_RE = re.compile(
+    r"/\s*(?P<level>[A-Za-z_]\w*)\s*=\s*(?P<count>ALL|\d+)\s*"
+    r"(?:\{(?P<filter>[^{}]*)\})?\s*")
+_OPTION_RE = re.compile(r"\s*(?P<key>[A-Za-z_]\w*)\s*=\s*(?P<value>[^,|]+?)\s*$")
+
+
+def _parse_alternative(text: str) -> ResourceRequest:
+    text = text.strip()
+    if not text:
+        raise BadRequest("empty alternative in request")
+    # split off ', key=value' options — on commas outside {} only, so a
+    # filter like {pod IN (1,2)} survives
+    chunks = _split_outside_braces(text, ",")
+    levels_part = chunks[0].strip()
+    if not levels_part.startswith("/"):
+        raise BadRequest(f"request must start with '/level=count', "
+                         f"got {text!r}")
+    pos, levels = 0, []
+    while pos < len(levels_part):
+        m = _TERM_RE.match(levels_part, pos)
+        if m is None:
+            raise BadRequest(f"cannot parse request near "
+                             f"{levels_part[pos:]!r} in {text!r}")
+        count = None if m.group("count") == "ALL" else int(m.group("count"))
+        if count is not None and count < 1:
+            raise BadRequest(f"level count must be >= 1 in {text!r}")
+        levels.append(LevelRequest(m.group("level"), count,
+                                   validate_properties(m.group("filter") or "")))
+        pos = m.end()
+    weight, walltime = 1, None
+    for opt in chunks[1:]:
+        m = _OPTION_RE.match(opt)
+        if m is None:
+            raise BadRequest(f"cannot parse option {opt.strip()!r} in {text!r}")
+        key, value = m.group("key"), m.group("value")
+        if key == "weight":
+            if not value.isdigit() or int(value) < 1:
+                raise BadRequest(f"weight must be a positive int, got {value!r}")
+            weight = int(value)
+        elif key == "walltime":
+            try:
+                walltime = float(value)
+            except ValueError:
+                raise BadRequest(f"walltime must be a number, got {value!r}")
+            if walltime <= 0:
+                raise BadRequest(f"walltime must be > 0, got {value!r}")
+        else:
+            raise BadRequest(f"unknown request option {key!r} "
+                             f"(have: weight, walltime)")
+    # normalise: a request stopping above 'host' means whole blocks
+    if levels and levels[-1].level != HIERARCHY[-1]:
+        levels.append(LevelRequest(HIERARCHY[-1], None, ""))
+    req = ResourceRequest(levels=tuple(levels), weight=weight, walltime=walltime)
+    _check_levels(req.levels)
+    return req
+
+
+def _split_outside_braces(text: str, sep: str) -> list[str]:
+    out, depth, cur = [], 0, []
+    for ch in text:
+        if ch == "{":
+            depth += 1
+        elif ch == "}":
+            depth = max(0, depth - 1)
+        if ch == sep and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    out.append("".join(cur))
+    return out
+
+
+def parse_request(text: str) -> list[ResourceRequest]:
+    """Parse a request string into its ordered moldable alternatives."""
+    if not isinstance(text, str) or not text.strip():
+        raise BadRequest("empty resource request")
+    return [_parse_alternative(alt)
+            for alt in _split_outside_braces(text, "|")]
+
+
+# ----------------------------------------------------------- serialisation
+def request_to_json(alternatives: list[ResourceRequest]) -> str:
+    """Canonical JSON for the ``jobs.resourceRequest`` column (stable field
+    order + separators, so equal requests serialise byte-identically and the
+    per-pass compile cache can key on the string)."""
+    return json.dumps({"alternatives": [a.to_dict() for a in alternatives]},
+                      sort_keys=True, separators=(",", ":"))
+
+
+def request_from_json(text: str) -> list[ResourceRequest]:
+    try:
+        doc = json.loads(text)
+    except (TypeError, ValueError) as exc:
+        raise BadRequest(f"resourceRequest is not valid JSON: {exc}") from exc
+    if not isinstance(doc, dict) or not isinstance(doc.get("alternatives"), list) \
+            or not doc["alternatives"]:
+        raise BadRequest(f"resourceRequest JSON must be "
+                         f"{{'alternatives': [...]}}, got {text!r}")
+    return [ResourceRequest.from_dict(d) for d in doc["alternatives"]]
+
+
+def canonical_request(alternatives: list[ResourceRequest]) -> str:
+    """The request language rendering of parsed alternatives
+    (``parse_request(canonical_request(x)) == x``)."""
+    return " | ".join(a.render() for a in alternatives)

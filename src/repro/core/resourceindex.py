@@ -17,7 +17,7 @@ from __future__ import annotations
 
 from typing import Iterable, Iterator
 
-__all__ = ["ResourceIndex"]
+__all__ = ["ResourceIndex", "HierarchyIndex"]
 
 
 class ResourceIndex:
@@ -83,3 +83,47 @@ class ResourceIndex:
 
     def set_of(self, mask: int) -> set[int]:
         return set(self.iter_rids(mask))
+
+
+class HierarchyIndex:
+    """Per-level block masks over a :class:`ResourceIndex`.
+
+    A *block* is the bitmask of every indexed resource sharing one value of a
+    hierarchy level — one mask per pod, one per (pod, switch). Blocks are
+    ordered by ascending (pod, switch), matching the flat scheduler's
+    ``ORDER BY pod, switch, idResource`` locality order, so hierarchical
+    selection walks the interconnect in the same direction the legacy
+    heuristic did. Built once per scheduling pass (the topology only changes
+    between passes) and AND-ed against per-request candidate masks.
+
+    Switch blocks key on the (pod, switch) *pair*: two pods may reuse a
+    switch label without their hosts ever counting as one block.
+    """
+
+    __slots__ = ("index", "_blocks")
+
+    def __init__(self, index: ResourceIndex, rows: Iterable):
+        """``rows`` yield (idResource, pod, switch); ids unknown to ``index``
+        (e.g. non-Alive resources) are skipped."""
+        self.index = index
+        pods: dict = {}
+        switches: dict = {}
+        for rid, pod, switch in rows:
+            if rid not in index:
+                continue
+            bit = 1 << index.bit_of(rid)
+            pods[pod] = pods.get(pod, 0) | bit
+            key = (pod, switch)
+            switches[key] = switches.get(key, 0) | bit
+        self._blocks: dict[str, list[int]] = {
+            "pod": [pods[k] for k in sorted(pods)],
+            "switch": [switches[k] for k in sorted(switches)],
+        }
+
+    def blocks(self, level: str) -> list[int]:
+        """Ordered block masks for a non-leaf hierarchy level."""
+        try:
+            return self._blocks[level]
+        except KeyError:
+            raise KeyError(f"no block masks for hierarchy level {level!r}; "
+                           f"have {sorted(self._blocks)}")

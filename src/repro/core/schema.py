@@ -38,7 +38,9 @@ CREATE TABLE IF NOT EXISTS jobs (
     bestEffort          INTEGER NOT NULL DEFAULT 0,       -- §3.3 global computing
     toCancel            INTEGER NOT NULL DEFAULT 0,       -- scheduler-set kill flag
     reservationStart    REAL,                             -- requested slot (reservations)
-    checkpointPath      TEXT DEFAULT ''                   -- data-plane resume handle
+    checkpointPath      TEXT DEFAULT '',                  -- data-plane resume handle
+    resourceRequest     TEXT,                             -- canonical JSON (request.py)
+    deadline            REAL                              -- submission contract (Libra)
 )
 """
 
@@ -123,6 +125,38 @@ ALL_INDEXES = [
     "CREATE INDEX IF NOT EXISTS idx_assign_resource ON assignments(idResource)",
 ]
 
+# Column migrations applied on reopen (like ALL_INDEXES): databases created
+# before a column existed gain it without losing state — the crash-recovery
+# contract must survive schema growth.
+JOBS_MIGRATIONS = [
+    ("resourceRequest", "ALTER TABLE jobs ADD COLUMN resourceRequest TEXT"),
+    ("deadline", "ALTER TABLE jobs ADD COLUMN deadline REAL"),
+]
+
+
+def apply_migrations(db) -> None:
+    """Bring a reopened store up to this code version: add any jobs columns
+    it predates, and install the default admission rules that validate the
+    new columns (matched by exact rule text, so an administrator's edited
+    or deleted copies are never duplicated or resurrected — only rules the
+    store has never seen are added). No-op on up-to-date stores."""
+    have = {r["name"] for r in db.query("PRAGMA table_info(jobs)")}
+    missing = [ddl for col, ddl in JOBS_MIGRATIONS if col not in have]
+    if missing:
+        with db.transaction() as cur:
+            for ddl in missing:
+                cur.execute(ddl)
+        # a store that predates the typed-request columns also predates the
+        # rules validating them (11: topology caps, 12: reachable deadline)
+        existing = {r["rule"] for r in db.query("SELECT rule FROM admission_rules")}
+        new_rules = [(prio, rule) for prio, rule in DEFAULT_ADMISSION_RULES
+                     if prio in (11, 12) and rule not in existing]
+        if new_rules:
+            with db.transaction() as cur:
+                cur.executemany(
+                    "INSERT INTO admission_rules(priority, rule) VALUES (?,?)",
+                    new_rules)
+
 # Default admission rules, stored in the DB as code exactly as the paper
 # stores Perl in MySQL (§2.1: "rules are stored as Perl code in the
 # database"). They run in a namespace exposing `job` (dict, mutable) and
@@ -137,6 +171,25 @@ DEFAULT_ADMISSION_RULES = [
         "if job['nbNodes'] * job['weight'] > ctx['total_procs']:\n"
         "    raise AdmissionError('job asks for %d procs, cluster has %d'\n"
         "        % (job['nbNodes'] * job['weight'], ctx['total_procs']))"
+    )),
+    # rules see the PARSED request (job['request'] is the list-of-dicts form
+    # of request.py alternatives) and can cap or rewrite it — here: no
+    # alternative may ask for more pods/switches than the cluster has
+    (11, (
+        "for alt in (job.get('request') or []):\n"
+        "    for lvl in alt.get('levels', []):\n"
+        "        cap = {'pod': ctx['total_pods'],\n"
+        "               'switch': ctx['total_switches']}.get(lvl.get('level'))\n"
+        "        if cap is not None and (lvl.get('count') or 0) > cap:\n"
+        "            raise AdmissionError('request asks for %d %ss, cluster has %d'\n"
+        "                % (lvl['count'], lvl['level'], cap))"
+    )),
+    # a deadline (Libra-style submission contract) must be reachable at all
+    (12, (
+        "if job.get('deadline') is not None and \\\n"
+        "        job['deadline'] < job.get('submissionTime', 0) + job['maxTime']:\n"
+        "    raise AdmissionError('deadline %.1f unreachable: job needs %.1fs'\n"
+        "        % (job['deadline'], job['maxTime']))"
     )),
     # §3.3: submitting to the besteffort queue tags the job preemptible —
     # "this property is set by the module that validates incoming jobs"

@@ -60,6 +60,7 @@ class JobRecord:
 
 class ClusterSimulator:
     def __init__(self, *, n_nodes: int = 17, weight: int = 2, pods: int = 1,
+                 switches_per_pod: int = 1,
                  policy: str = "fifo_backfill", db_path: str = ":memory:",
                  check_nodes: bool = False, transport: SimTransport | None = None,
                  victim_policy: str = "youngest_first",
@@ -72,9 +73,22 @@ class ClusterSimulator:
         per_pod = n_nodes // pods if pods > 1 else n_nodes
         for p in range(pods):
             count = per_pod if p < pods - 1 else n_nodes - per_pod * (pods - 1)
-            api.add_resources(
-                self.db, [f"pod{p}-host{i}" for i in range(count)],
-                weight=weight, pod=p, switch=f"sw{p}")
+            if switches_per_pod <= 1:
+                api.add_resources(
+                    self.db, [f"pod{p}-host{i}" for i in range(count)],
+                    weight=weight, pod=p, switch=f"sw{p}")
+            else:
+                # contiguous host ranges per switch, so hierarchical requests
+                # (/switch=1/host=N) have real blocks to bind to
+                per_sw = count // switches_per_pod
+                for s in range(switches_per_pod):
+                    lo = s * per_sw
+                    hi = count if s == switches_per_pod - 1 else lo + per_sw
+                    if lo >= hi:
+                        continue
+                    api.add_resources(
+                        self.db, [f"pod{p}-host{i}" for i in range(lo, hi)],
+                        weight=weight, pod=p, switch=f"sw{p}.{s}")
         with self.db.transaction() as cur:
             cur.execute("UPDATE queues SET policy=?", (policy,))
         clock = lambda: self.now  # noqa: E731
@@ -99,13 +113,17 @@ class ClusterSimulator:
                weight: int = 1, max_time: float | None = None,
                queue: str | None = None, user: str = "sim",
                properties: str = "", reservation_start: float | None = None,
-               best_effort: bool | None = None, tag: str = "") -> None:
+               best_effort: bool | None = None, tag: str = "",
+               request: str | None = None) -> None:
+        """Queue a submission event. ``request`` is a resource-request
+        language string (hierarchical / moldable); when given it replaces
+        the flat nb_nodes/weight/properties triple."""
         self._push(at, "submit", {
             "duration": duration, "nb_nodes": nb_nodes, "weight": weight,
             "max_time": max_time if max_time is not None else duration * 1.25 + 1.0,
             "queue": queue, "user": user, "properties": properties,
             "reservation_start": reservation_start, "best_effort": best_effort,
-            "tag": tag})
+            "tag": tag, "request": request})
 
     def fail_node(self, at: float, hostname: str) -> None:
         self._push(at, "fail", hostname)
@@ -153,11 +171,17 @@ class ClusterSimulator:
                                  "tag": p["tag"]}),
             user=p["user"], queue=p["queue"], nb_nodes=p["nb_nodes"],
             weight=p["weight"], max_time=p["max_time"],
-            properties=p["properties"],
+            properties=p["properties"], request=p.get("request"),
             reservation_start=p["reservation_start"],
             best_effort=p["best_effort"], clock=lambda: self.now)
-        self.records[jid] = JobRecord(jid, self.now, p["duration"],
-                                      p["nb_nodes"] * p["weight"])
+        if p.get("request"):
+            # procs from the stored first alternative (the legacy mirror)
+            row = self.db.query_one(
+                "SELECT nbNodes, weight FROM jobs WHERE idJob=?", (jid,))
+            procs = row["nbNodes"] * row["weight"]
+        else:
+            procs = p["nb_nodes"] * p["weight"]
+        self.records[jid] = JobRecord(jid, self.now, p["duration"], procs)
 
     def _on_complete(self, payload: tuple[int, bool, str]) -> None:
         jid, ok, msg = payload
@@ -184,7 +208,8 @@ class ClusterSimulator:
     # ----------------------------------------------------------- bookkeeping
     def _schedule_completions(self) -> None:
         rows = self.db.query(
-            "SELECT idJob, startTime, maxTime, command FROM jobs WHERE state='Running'")
+            "SELECT idJob, startTime, maxTime, weight, command FROM jobs "
+            "WHERE state='Running'")
         for r in rows:
             jid = r["idJob"]
             if jid in self._completion_scheduled:
@@ -202,6 +227,10 @@ class ClusterSimulator:
             self.records[jid].resources = frozenset(
                 row["idResource"] for row in self.db.query(
                     "SELECT idResource FROM assignments WHERE idJob=?", (jid,)))
+            # refresh procs from the placement actually made: a moldable
+            # alternative may have landed a different host count than the
+            # first alternative's submit-time mirror
+            self.records[jid].procs = len(self.records[jid].resources) * r["weight"]
             if duration > r["maxTime"]:
                 self._push(r["startTime"] + r["maxTime"], "complete",
                            (jid, False, "walltime exceeded"))

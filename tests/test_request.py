@@ -1,0 +1,349 @@
+"""The typed submission API: request-language parsing (round-trip +
+rejection), hierarchical placement as a *constraint*, moldable fallback
+order, legacy-shim equivalence, and the typed client facade's errors."""
+
+import pytest
+
+from repro.core import (ClusterClient, ClusterSimulator, InvalidStateTransition,
+                        JobRequest, UnknownJob, add_resources, connect, oardel,
+                        oarhold, oarresume, oarsub)
+from repro.core.request import (BadRequest, LevelRequest, ResourceRequest,
+                                canonical_request, parse_request,
+                                request_from_json, request_to_json)
+
+
+# ------------------------------------------------------------------ parsing
+def test_parse_simple_and_defaults():
+    (alt,) = parse_request("/host=4")
+    assert alt.levels == (LevelRequest("host", 4, ""),)
+    assert alt.weight == 1 and alt.walltime is None
+    assert alt.is_flat and alt.min_hosts == 4
+
+
+def test_parse_hierarchical_with_options():
+    (alt,) = parse_request("/pod=2/switch=1/host=4{mem_gb >= 32}, "
+                           "weight=2, walltime=3600")
+    assert [l.level for l in alt.levels] == ["pod", "switch", "host"]
+    assert [l.count for l in alt.levels] == [2, 1, 4]
+    assert alt.levels[-1].filter == "mem_gb >= 32"
+    assert alt.weight == 2 and alt.walltime == 3600.0
+    assert alt.min_hosts == 8 and not alt.is_flat
+
+
+def test_parse_moldable_alternatives_ordered():
+    alts = parse_request("/switch=1/host=8 | /pod=1/host=8, walltime=7200")
+    assert len(alts) == 2
+    assert alts[0].levels[0].level == "switch"
+    assert alts[1].levels[0].level == "pod"
+    assert alts[1].walltime == 7200.0
+
+
+def test_parse_implicit_leaf_is_whole_blocks():
+    (alt,) = parse_request("/switch=2")
+    assert alt.levels == (LevelRequest("switch", 2, ""),
+                          LevelRequest("host", None, ""))
+
+
+def test_roundtrip_parse_json_parse():
+    for text in ["/host=4",
+                 "/switch=1/host=4",
+                 "/pod=2/switch=1/host=4{mem_gb >= 32}, weight=2, walltime=60",
+                 "/switch=1/host=8 | /pod=1/host=8, walltime=7200",
+                 "/host=ALL",
+                 "/pod=1/switch=2"]:
+        alts = parse_request(text)
+        assert request_from_json(request_to_json(alts)) == alts
+        assert parse_request(canonical_request(alts)) == alts
+
+
+@pytest.mark.parametrize("bad", [
+    "",
+    "   ",
+    "host=4",                      # missing leading '/'
+    "/rack=2/host=4",              # unknown level
+    "/host=4/switch=1",            # wrong hierarchy order
+    "/pod=1/pod=2/host=1",         # duplicate level
+    "/host=0",                     # zero count
+    "/host=-2",                    # negative count
+    "/host=x",                     # non-integer count
+    "/pod=ALL/host=1",             # ALL above the leaf
+    "/host=4, weight=0",           # bad option value
+    "/host=4, walltime=0",         # walltime must be positive
+    "/host=4, frobnicate=1",       # unknown option
+    "/host=4 | ",                  # empty moldable alternative
+    "/host=4{mem_gb >= 1; DROP TABLE jobs}",  # illegal SQL in filter
+])
+def test_parse_rejects_malformed(bad):
+    with pytest.raises(ValueError):   # BadRequest or BadProperties
+        parse_request(bad)
+
+
+def test_from_dict_rejects_garbage():
+    with pytest.raises(BadRequest):
+        ResourceRequest.from_dict({"levels": []})
+    with pytest.raises(BadRequest):
+        ResourceRequest.from_dict({"levels": [{"level": "host", "count": True}]})
+    with pytest.raises(BadRequest):
+        request_from_json("{}")
+    with pytest.raises(BadRequest):
+        request_from_json("not json")
+
+
+# ------------------------------------------------------- placement semantics
+def _topology(db):
+    return {r["idResource"]: (r["pod"], r["switch"]) for r in
+            db.query("SELECT idResource, pod, switch FROM resources")}
+
+
+def test_hierarchical_placement_single_switch():
+    """/switch=1/host=N: every chosen host shares one switch — a constraint,
+    not the old best-effort locality ordering."""
+    sim = ClusterSimulator(n_nodes=16, weight=1, pods=2, switches_per_pod=2)
+    # fragment the cluster so ascending-id first-fit WOULD straddle switches:
+    # occupy 3 of the 4 hosts of the first switch with a pinned job
+    sim.submit(0.0, duration=50, nb_nodes=3, properties="switch = 'sw0.0'")
+    sim.submit(1.0, duration=10, request="/switch=1/host=3", max_time=20)
+    recs = sim.run()
+    st = {r.idJob: r for r in recs}
+    assert st[2].state == "Terminated"
+    topo = _topology(sim.db)
+    switches = {topo[rid] for rid in st[2].resources}
+    assert len(switches) == 1
+    # it could not have started at t=1 on the fragmented first switch
+    assert switches != {(0, "sw0.0")}
+    assert st[2].start == 1.0  # free switch existed -> no wait
+
+
+def test_hierarchical_cross_pod_placement():
+    sim = ClusterSimulator(n_nodes=16, weight=1, pods=2, switches_per_pod=2)
+    sim.submit(0.0, duration=5, request="/pod=2/switch=1/host=2")
+    recs = sim.run()
+    assert recs[0].state == "Terminated"
+    topo = _topology(sim.db)
+    blocks = {topo[rid] for rid in recs[0].resources}
+    assert len(recs[0].resources) == 4
+    assert len({p for p, _ in blocks}) == 2      # two pods
+    assert len(blocks) == 2                      # one switch in each
+
+
+def test_whole_block_request_takes_every_host():
+    sim = ClusterSimulator(n_nodes=8, weight=1, pods=2, switches_per_pod=2)
+    sim.submit(0.0, duration=5, request="/switch=2")   # two WHOLE switches
+    recs = sim.run()
+    assert recs[0].state == "Terminated"
+    topo = _topology(sim.db)
+    blocks = {topo[rid] for rid in recs[0].resources}
+    assert len(recs[0].resources) == 4 and len(blocks) == 2
+
+
+def test_moldable_fallback_declared_order():
+    sim = ClusterSimulator(n_nodes=16, weight=1, pods=2, switches_per_pod=2)
+    # 6 hosts under one switch are impossible (switches have 4): the second
+    # alternative (pod-local) must win
+    sim.submit(0.0, duration=5, request="/switch=1/host=6 | /pod=1/host=6")
+    # first alternative satisfiable -> it wins even with the fallback listed
+    sim.submit(0.0, duration=5, request="/switch=1/host=2 | /host=2")
+    recs = sim.run()
+    st = {r.idJob: r for r in recs}
+    topo = _topology(sim.db)
+    pods_1 = {topo[rid][0] for rid in st[1].resources}
+    assert st[1].state == "Terminated" and len(st[1].resources) == 6
+    assert len(pods_1) == 1                      # pod-local fallback used
+    switches_2 = {topo[rid] for rid in st[2].resources}
+    assert len(switches_2) == 1                  # tight alternative won
+
+
+def test_moldable_walltime_override_persisted():
+    sim = ClusterSimulator(n_nodes=4, weight=1)
+    sim.submit(0.0, duration=5, request="/host=2, walltime=99", max_time=50)
+    recs = sim.run()
+    assert recs[0].state == "Terminated"
+    assert sim.db.scalar("SELECT maxTime FROM jobs WHERE idJob=1") == 99.0
+
+
+def test_unsatisfiable_request_never_preempts_besteffort():
+    """/switch=1/host=12 on 8-host switches passes the cluster-wide
+    admission cap but can never place: preemption must recognise the block
+    constraint is structurally unsatisfiable and leave best-effort work
+    alone (no endless kill/resubmit livelock)."""
+    sim = ClusterSimulator(n_nodes=16, weight=1, pods=1, switches_per_pod=2)
+    for _ in range(4):
+        sim.submit(0.0, duration=400, nb_nodes=4, queue="besteffort",
+                   max_time=1000)
+    sim.submit(5.0, duration=10, request="/switch=1/host=12", max_time=20)
+    recs = sim.run(until=300)
+    st = {r.idJob: r for r in recs}
+    assert st[5].state == "Waiting"          # impossible shape just waits
+    n_jobs = sim.db.scalar("SELECT COUNT(*) FROM jobs")
+    assert n_jobs == 5                        # no resubmission explosion
+    preempted = sim.db.scalar(
+        "SELECT COUNT(*) FROM jobs WHERE message LIKE 'preempted:%'")
+    assert preempted == 0                     # nothing was killed for it
+
+
+def test_hierarchical_job_still_preempts_when_satisfiable():
+    """The structural check must not break legitimate hierarchical
+    preemption: a satisfiable /switch=1 request reclaims best-effort work."""
+    sim = ClusterSimulator(n_nodes=8, weight=1, pods=1, switches_per_pod=2)
+    for _ in range(2):
+        sim.submit(0.0, duration=800, nb_nodes=4, queue="besteffort",
+                   max_time=1000)
+    sim.submit(5.0, duration=10, request="/switch=1/host=4", max_time=20)
+    recs = sim.run(until=2000)
+    st = {r.idJob: r for r in recs}
+    assert st[3].state == "Terminated"
+    assert st[3].start < 400                  # preemption, not waiting out
+
+
+def test_unsatisfiable_request_waits_not_crashes():
+    sim = ClusterSimulator(n_nodes=4, weight=1, pods=2, switches_per_pod=2)
+    sim.submit(0.0, duration=5, request="/switch=1/host=4")  # switches have 2
+    recs = sim.run(until=100)
+    assert recs[0].state in ("Waiting", "Error")
+
+
+def test_admission_rule_caps_pod_count():
+    sim = ClusterSimulator(n_nodes=8, weight=1, pods=2)
+    with pytest.raises(Exception) as exc_info:
+        oarsub(sim.db, "x", request="/pod=3/host=1", clock=lambda: 0.0)
+    assert "pods" in str(exc_info.value)
+
+
+def test_legacy_shim_matches_explicit_flat_request():
+    """oarsub(nb_nodes=, weight=) and the equivalent /host=N request place
+    identically — the shim is the same single-level request."""
+    def run_mix(use_request):
+        sim = ClusterSimulator(n_nodes=8, weight=2, pods=2)
+        for at, n in [(0.0, 4), (0.0, 1), (2.0, 3), (5.0, 8), (9.0, 2)]:
+            if use_request:
+                sim.submit(at, duration=10, request=f"/host={n}")
+            else:
+                sim.submit(at, duration=10, nb_nodes=n)
+        return [(r.idJob, r.start, r.stop, tuple(sorted(r.resources)))
+                for r in sim.run()]
+    assert run_mix(False) == run_mix(True)
+
+
+# ------------------------------------------------------------- typed client
+def test_client_submit_stat_nodes_roundtrip():
+    db = connect()
+    add_resources(db, [f"h{i}" for i in range(4)], pod=0, switch="s0",
+                  weight=2, mem_gb=32)
+    client = ClusterClient(db)
+    info = client.submit(JobRequest("echo hi", request="/switch=1/host=2",
+                                    walltime=120.0, deadline=1e12))
+    assert info.state == "Waiting" and info.nb_nodes == 2
+    assert info.deadline == 1e12
+    assert [l.level for l in info.request[0].levels] == ["switch", "host"]
+    assert isinstance(client.stat(), list)
+    nodes = client.nodes()
+    assert len(nodes) == 4 and nodes[0].mem_gb == 32 and nodes[0].busy == 0
+
+
+def test_client_typed_errors_unknown_and_invalid():
+    db = connect()
+    add_resources(db, ["h0"])
+    client = ClusterClient(db)
+    with pytest.raises(UnknownJob):
+        client.cancel(12345)
+    with pytest.raises(UnknownJob):
+        client.hold(12345)
+    with pytest.raises(UnknownJob):
+        client.resume(12345)
+    with pytest.raises(UnknownJob):
+        client.stat(12345)
+    info = client.submit(JobRequest("x"))
+    client.hold(info.id)
+    with pytest.raises(InvalidStateTransition):
+        client.hold(info.id)           # Hold -> Hold is illegal
+    client.resume(info.id)
+    with pytest.raises(InvalidStateTransition):
+        client.resume(info.id)         # Waiting -> Waiting is illegal
+    # UnknownJob/InvalidStateTransition subclass the old error types, so
+    # pre-redesign callers catching KeyError / IllegalTransition still work
+    assert issubclass(UnknownJob, KeyError)
+
+
+def test_oardel_on_terminated_job_raises():
+    sim = ClusterSimulator(n_nodes=2, weight=1)
+    sim.submit(0.0, duration=5, nb_nodes=1)
+    recs = sim.run()
+    assert recs[0].state == "Terminated"
+    with pytest.raises(InvalidStateTransition):
+        oardel(sim.db, recs[0].idJob)
+    with pytest.raises(UnknownJob):
+        oardel(sim.db, 999)
+    with pytest.raises(UnknownJob):
+        oarhold(sim.db, 999)
+    with pytest.raises(UnknownJob):
+        oarresume(sim.db, 999)
+
+
+def test_admission_deadline_rule():
+    db = connect()
+    add_resources(db, ["h0"])
+    client = ClusterClient(db)
+    with pytest.raises(Exception) as exc_info:
+        client.submit(JobRequest("x", walltime=3600.0, deadline=1.0))
+    assert "deadline" in str(exc_info.value)
+
+
+def test_admission_rewrite_refreshes_legacy_mirror():
+    """A rule that rewrites job['request'] must be reflected in the stored
+    nbNodes/weight mirror columns (preemption deficits read them)."""
+    from repro.core.admission import add_rule
+    db = connect()
+    add_resources(db, [f"h{i}" for i in range(8)])
+    add_rule(db, "for alt in job.get('request') or []:\n"
+                 "    for lvl in alt['levels']:\n"
+                 "        if lvl['level'] == 'host' and (lvl['count'] or 0) > 2:\n"
+                 "            lvl['count'] = 2")
+    jid = oarsub(db, "x", request="/host=6")
+    row = db.query_one("SELECT nbNodes, resourceRequest FROM jobs "
+                       "WHERE idJob=?", (jid,))
+    assert row["nbNodes"] == 2
+    assert request_from_json(row["resourceRequest"])[0].host_count == 2
+
+
+def test_migrated_store_gains_validation_rules(tmp_path):
+    """Reopening a pre-request-era store installs the topology/deadline
+    rules, so fresh and migrated databases admit identically."""
+    import sqlite3
+    path = str(tmp_path / "old.db")
+    db = connect(path, fresh=True)
+    add_resources(db, ["h0"])
+    with db.transaction() as cur:   # simulate a pre-migration store
+        cur.execute("DELETE FROM admission_rules WHERE priority IN (11, 12)")
+    db.close()
+    raw = sqlite3.connect(path)
+    # rebuild the jobs table without the new columns (this container's
+    # sqlite predates ALTER TABLE ... DROP COLUMN)
+    cols = [r[1] for r in raw.execute("PRAGMA table_info(jobs)")
+            if r[1] not in ("resourceRequest", "deadline")]
+    collist = ", ".join(cols)
+    raw.executescript(
+        f"CREATE TABLE jobs_old AS SELECT {collist} FROM jobs;"
+        f"DROP TABLE jobs;"
+        f"ALTER TABLE jobs_old RENAME TO jobs;")
+    raw.commit()
+    raw.close()
+    db2 = connect(path)
+    with pytest.raises(Exception) as exc_info:
+        oarsub(db2, "x", deadline=1.0)
+    assert "deadline" in str(exc_info.value)
+    db2.close()
+
+
+def test_request_survives_crash_recovery(tmp_path):
+    """The canonical JSON column is part of the recovery contract: reopen
+    the store and the typed request schedules as submitted."""
+    path = str(tmp_path / "oar.db")
+    db = connect(path, fresh=True)
+    add_resources(db, [f"h{i}" for i in range(4)], pod=0, switch="s0")
+    jid = oarsub(db, "x", request="/switch=1/host=2")
+    db.close()
+    db2 = connect(path)
+    client = ClusterClient(db2)
+    info = client.stat(jid)
+    assert info.request is not None and info.request[0].levels[0].count == 1
+    db2.close()
