@@ -42,7 +42,7 @@ def _headline(results) -> object | None:
 
 def write_bench_sched(path: str = BENCH_PATH, *, scale_results=None,
                       burst_results=None, hier_results=None,
-                      smoke: bool | None = None) -> dict:
+                      trace_result=None, smoke: bool | None = None) -> dict:
     """Merge suite results into BENCH_sched.json (section per suite, so
     scale, the hierarchical-request variant and burst can each emit
     independently without clobbering)."""
@@ -73,6 +73,23 @@ def write_bench_sched(path: str = BENCH_PATH, *, scale_results=None,
         r = _headline(hier_results)
         if r is not None and not smoke:
             payload["speedup_vs_seed_hier"] = _speedup(r)
+    if scale_results is not None and not smoke:
+        # idle-cluster (no-op) pass latency at the headline size: the
+        # dirty-flag fast path vs the full stateless rebuild
+        r = _headline(scale_results)
+        if r is not None and getattr(r, "noop_pass_s", 0):
+            payload["noop_pass"] = {
+                "nodes": r.nodes,
+                "full_pass_s": r.schedule_pass_s,
+                "noop_pass_s": r.noop_pass_s,
+                "sql_per_noop_pass": r.sql_per_noop_pass,
+                "full_over_noop": round(r.schedule_pass_s / r.noop_pass_s, 1),
+            }
+    if trace_result is not None:
+        # end-to-end simulator trace (100k jobs full-scale): the number that
+        # says whether the event-driven loop holds up over a long run
+        payload["sim_trace_smoke" if smoke else "sim_trace"] = \
+            dataclasses.asdict(trace_result)
     if burst_results is not None:
         payload["burst_smoke" if smoke else "burst"] = \
             [dataclasses.asdict(r) for r in burst_results]

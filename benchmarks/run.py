@@ -10,12 +10,15 @@ Suites:
   esp2           figs 4-8 + table 3 — ESP2 throughput/efficiency per policy
   burst          fig 9   — submission-burst response time + SQL query rate
   parallel_jobs  fig 10  — parallel launch cost vs node count × launcher mode
-  scale          beyond-paper — meta-scheduler pass time up to 10k nodes
+  scale          beyond-paper — meta-scheduler pass time up to 10k nodes,
+                 idle-cluster no-op pass latency (dirty-flag fast path) and
+                 the 100k-job end-to-end simulator trace
 
 The scheduler-perf suites (scale, burst) additionally record their numbers
 in ``BENCH_sched.json`` (pass wall time, SQL queries per pass, speedup vs
-the frozen seed baseline) so regressions are visible across PRs. ``--smoke``
-shrinks them (1k nodes; small bursts) to fit the tier-1 time budget.
+the frozen seed baseline) so regressions are visible across PRs — see
+docs/BENCHMARKS.md for the methodology. ``--smoke`` shrinks them (1k nodes;
+2k-job trace; small bursts) to fit the tier-1/CI time budget.
 """
 
 from __future__ import annotations

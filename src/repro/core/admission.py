@@ -33,6 +33,21 @@ _SAFE_BUILTINS = {
     "isinstance": isinstance, "ValueError": ValueError, "round": round,
 }
 
+# compiled-code memo keyed by rule text: the DB stays the sole source of
+# truth (rules are re-read every submission, so runtime edits apply
+# immediately) — only the pure text→bytecode step is cached. Submission is a
+# hot path under bursts; recompiling 8 identical rules per job dominated it.
+_code_cache: dict[str, Any] = {}
+
+
+def _compiled(rule: str):
+    code = _code_cache.get(rule)
+    if code is None:
+        if len(_code_cache) > 1024:   # churn guard for rule-generating tests
+            _code_cache.clear()
+        code = _code_cache[rule] = compile(rule, "<admission_rule>", "exec")
+    return code
+
 
 def _cluster_ctx(db) -> dict[str, Any]:
     # registered capacity, NOT just currently-Alive: a transient node
@@ -67,7 +82,7 @@ def run_admission(db, job: dict[str, Any]) -> dict[str, Any]:
     ctx = _cluster_ctx(db)
     ns = {"job": job, "ctx": ctx, "AdmissionError": AdmissionError}
     for row in rules:
-        code = compile(row["rule"], "<admission_rule>", "exec")
+        code = _compiled(row["rule"])
         try:
             exec(code, {"__builtins__": _SAFE_BUILTINS}, ns)  # noqa: S102 — by design (§2.1)
         except AdmissionError:

@@ -106,7 +106,13 @@ class CentralModule:
             if "scheduler" in due:
                 report["schedule"] = self.scheduler.run()
                 self._last_run["scheduler"] = now
-            if "launcher" in due or "scheduler" in due:
+            # the launch leg rides on a scheduler pass (it may have marked
+            # jobs toLaunch) — except a no-op pass, which proved the store
+            # unchanged: riding along would make the idle wake-up pay SQL
+            # for nothing. Launch-leg periodic redundancy still applies.
+            scheduler_acted = "scheduler" in due and \
+                not report["schedule"].get("noop")
+            if "launcher" in due or scheduler_acted:
                 self.executor.reap_walltime_exceeded()
                 report["launched"] = self.executor.launch_pending()
                 self._last_run["launcher"] = now
@@ -116,6 +122,35 @@ class CentralModule:
             self._busy = False
             # notifications that arrived mid-pass are now pending; the caller
             # (daemon loop or simulator) will tick again.
+
+    # ------------------------------------------------------------- deadlines
+    def next_periodic_deadline(self) -> float:
+        """Next instant any task becomes due by periodic redundancy alone."""
+        return min(self._last_run[t] + self.periods[t] for t in TASKS)
+
+    def periodic_due(self, now: float) -> bool:
+        """True when some task is due at ``now`` even without notifications
+        (the automaton's other trigger besides the pending bits)."""
+        return self.next_periodic_deadline() <= now
+
+    def next_deadline(self, now: float | None = None) -> float | None:
+        """Earliest future instant a module must act at without any new
+        notification — aggregated from the modules that can report one
+        (today: the meta-scheduler's next granted-reservation start).
+
+        Periodic redundancy is deliberately NOT folded in: it is a
+        robustness floor, not an event. A wall-clock driver adds it via
+        :meth:`next_periodic_deadline`; the discrete-event simulator must
+        not (it would tick forever on an idle cluster).
+        """
+        deadlines = []
+        for module in (self.scheduler,):
+            report = getattr(module, "next_deadline", None)
+            if report is not None:
+                t = report(now)
+                if t is not None:
+                    deadlines.append(t)
+        return min(deadlines) if deadlines else None
 
     # ------------------------------------------------------------ daemon loop
     def run_forever(self, *, poll: float = 0.05,

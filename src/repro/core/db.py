@@ -50,8 +50,22 @@ class Database:
             self._conn.execute("PRAGMA journal_mode=WAL")
             self._conn.execute("PRAGMA synchronous=NORMAL")
         self._notify_hooks: list[Callable[[str], None]] = []
+        self._state_observers: list[Callable[[int, str, str], None]] = []
         self._txn_depth = 0           # open transaction() contexts (nesting)
+        self._txn_changes0 = 0        # total_changes at outermost txn entry
         self.query_count = 0          # §3.2.2: SQL load accounting
+        # Data generation: bumped whenever a statement actually modified rows
+        # (INSERT/UPDATE/DELETE on any state table — jobs, resources,
+        # assignments, gantt, queues...). Readers snapshot it to detect "has
+        # anything changed since I last looked" in O(1): the meta-scheduler's
+        # dirty-flag fast path reuses its previous pass verbatim while the
+        # generation is unchanged. Deliberately NOT bumped by log_event —
+        # appending to the event log is observability, not state, and the
+        # scheduler logs its own passes (a bump there would disarm the very
+        # fast path it feeds). Per-handle and in-memory only: a reopened
+        # store starts at 0, so every consumer's first look is a rebuild —
+        # exactly the paper's stateless-recovery contract.
+        self.generation = 0
 
     # ------------------------------------------------------------------ DDL
     def create_schema(self) -> None:
@@ -91,6 +105,8 @@ class Database:
             except BaseException:
                 cur.close()  # setup failed: depth untouched, handle usable
                 raise
+            if depth == 0:
+                self._txn_changes0 = self._conn.total_changes
             self._txn_depth += 1
             try:
                 yield cur
@@ -111,6 +127,8 @@ class Database:
                     cur.execute(f"RELEASE {sp}")
                 else:
                     self._conn.commit()  # outermost context commits the unit
+                    if self._conn.total_changes != self._txn_changes0:
+                        self.generation += 1
             finally:
                 self._txn_depth -= 1
                 cur.close()
@@ -122,17 +140,24 @@ class Database:
         the atomic-modification contract recovery relies on)."""
         with self._lock:
             self.query_count += 1
+            changes0 = self._conn.total_changes
             cur = self._conn.execute(sql, params)
-            if self._txn_depth == 0 and self._conn.in_transaction:
-                self._conn.commit()
+            if self._txn_depth == 0:
+                if self._conn.in_transaction:
+                    self._conn.commit()
+                if self._conn.total_changes != changes0:
+                    self.generation += 1
             return cur
 
     def executemany(self, sql: str, seq: Iterable[Sequence[Any]]) -> None:
         with self._lock:
             self.query_count += 1
+            changes0 = self._conn.total_changes
             self._conn.executemany(sql, seq)
             if self._txn_depth == 0:
                 self._conn.commit()
+                if self._conn.total_changes != changes0:
+                    self.generation += 1
 
     def query(self, sql: str, params: Sequence[Any] | dict = ()) -> list[sqlite3.Row]:
         with self._lock:
@@ -157,6 +182,20 @@ class Database:
     def notify(self, tag: str) -> None:
         for hook in list(self._notify_hooks):
             hook(tag)
+
+    # Job-state observers: called by jobstate.set_state (the single legal
+    # write path) with (job_id, old_state, new_state) AFTER the transition
+    # committed. This is NOT an inter-module channel — modules keep
+    # communicating through tables + content-free notifications (§2). It
+    # exists for the *physics* around the system: the discrete-event
+    # simulator uses it to track completions and resource usage in
+    # O(changed) instead of rescanning the jobs table per event.
+    def add_state_observer(self, obs: Callable[[int, str, str], None]) -> None:
+        self._state_observers.append(obs)
+
+    def observe_state(self, job_id: int, old: str, new: str) -> None:
+        for obs in list(self._state_observers):
+            obs(job_id, old, new)
 
     # -------------------------------------------------------------- logging
     def log_event(self, module: str, level: str, message: str, job_id: int | None = None) -> None:

@@ -69,7 +69,8 @@ def set_state(db, job_id: int, new_state: str, *, message: str | None = None,
         row = cur.execute("SELECT state FROM jobs WHERE idJob=?", (job_id,)).fetchone()
         if row is None:
             raise KeyError(f"no such job {job_id}")
-        check_transition(row["state"], new_state)
+        old_state = row["state"]
+        check_transition(old_state, new_state)
         sets, params = ["state=?"], [new_state]
         if message is not None:
             sets.append("message=?")
@@ -83,6 +84,9 @@ def set_state(db, job_id: int, new_state: str, *, message: str | None = None,
                 params.append(now)
         params.append(job_id)
         cur.execute(f"UPDATE jobs SET {', '.join(sets)} WHERE idJob=?", params)
+    # transition committed: tell observers (simulator bookkeeping) first,
+    # then ping the central module the paper's way (content-free tag)
+    db.observe_state(job_id, old_state, new_state)
     db.notify("jobstate")
 
 

@@ -99,23 +99,28 @@ class TaktukLauncher:
         failed: list[str] = []
         steals = 0
         connections = 0
-        # event-driven: heap of (time_free, worker_id); worker slices by id
-        slices: dict[int, list[str]] = {0: list(hosts)}
+        # event-driven: heap of (time_free, worker_id); worker slices by id.
+        # Invariant: every slice in the dict is non-empty — emptied slices
+        # are dropped immediately, so the steal scan below touches only
+        # workers that actually hold work (the naive keep-empties version
+        # made a full-cluster sweep O(workers²) in the endgame).
+        slices: dict[int, list[str]] = {0: list(hosts)} if hosts else {}
         heap: list[tuple[float, int]] = [(0.0, 0)]
         next_worker = 1
         makespan = 0.0
         while heap:
             t, w = heapq.heappop(heap)
-            sl = slices.get(w, [])
+            sl = slices.get(w)
             if not sl:
-                # steal half of the largest slice
-                donor = max(slices, key=lambda k: len(slices[k]), default=None)
-                if donor is None or not slices.get(donor):
-                    continue
-                take = slices[donor][len(slices[donor]) // 2:]
-                if not take:
-                    continue
-                del slices[donor][len(slices[donor]) // 2:]
+                if not slices:
+                    continue           # no work anywhere: the worker retires
+                # steal half of the largest remaining slice
+                donor = max(slices, key=lambda k: len(slices[k]))
+                dsl = slices[donor]
+                take = dsl[len(dsl) // 2:]
+                del dsl[len(dsl) // 2:]
+                if not dsl:
+                    del slices[donor]
                 sl = slices[w] = take
                 steals += 1
             host = sl.pop(0)
@@ -124,6 +129,8 @@ class TaktukLauncher:
                 dt = tr.execute(host, command)
             except TimeoutError:
                 failed.append(host)
+                if not sl:
+                    del slices[w]
                 t2 = t + tr.connect_timeout
                 makespan = max(makespan, t2)
                 heapq.heappush(heap, (t2, w))  # keep working after the timeout
@@ -136,9 +143,12 @@ class TaktukLauncher:
             next_worker += 1
             half = sl[len(sl) // 2:]
             del sl[len(sl) // 2:]
-            slices[child] = half
+            if half:
+                slices[child] = half
+            if not sl:
+                del slices[w]
             heapq.heappush(heap, (t2, child))
-            if sl or any(slices.values()):
+            if sl or slices:
                 heapq.heappush(heap, (t2, w))
         return DeploymentReport(reached, failed, makespan, connections, steals)
 
@@ -311,8 +321,17 @@ class Executor:
             return
         qmarks = ",".join("?" * len(hostnames))
         with self.db.transaction() as cur:
+            # only rows actually transitioning: re-suspecting an already-
+            # Suspected host every sweep would bump the store generation and
+            # re-notify the scheduler, forcing a full rebuild per monitor
+            # period for the whole duration of an outage — the first
+            # transition already failed the jobs and woke the scheduler
             cur.execute(f"UPDATE resources SET state='Suspected' "
-                        f"WHERE hostname IN ({qmarks})", hostnames)
+                        f"WHERE hostname IN ({qmarks}) AND state!='Suspected'",
+                        hostnames)
+            newly_suspected = cur.rowcount
+        if not newly_suspected:
+            return
         self.db.log_event("monitor", "warn",
                           f"nodes suspected (timeout): {','.join(hostnames)}")
         # jobs running on dead nodes fail → rescheduled by resubmission policy

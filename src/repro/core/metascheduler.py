@@ -9,8 +9,21 @@ associated scheduler. At the end of the process, the state of the job that
 should be executed is changed to 'toLaunch'."
 
 Everything here reads from and writes to the DB only; the in-memory Gantt is
-rebuilt on every pass (stateless between passes — a crash loses nothing, the
-paper's recovery argument).
+rebuilt from the DB whenever anything might have changed (stateless recovery
+— a crash loses nothing, the paper's robustness argument).
+
+Incremental no-op pass (the ROADMAP dirty-flag fast path): the store keeps a
+*generation counter* (``Database.generation``) bumped on every data write.
+A pass that itself wrote nothing proves the DB it read is exactly the DB it
+leaves behind, so its (empty) outcome is *armed* as reusable; as long as the
+generation is unchanged and no granted reservation's start time has arrived,
+``run()`` returns in O(1) with zero SQL instead of rebuilding the Gantt.
+Any write anywhere — a submission, a completion, a node failure, a by-hand
+UPDATE through this handle — bumps the generation and the next pass falls
+back to the full stateless rebuild. The fast path is an in-memory memo on
+one scheduler instance: a restarted scheduler (or a reopened store) starts
+unarmed and rebuilds from the DB, preserving the recovery contract
+(tests/test_simulator_events.py exercises the crash-restart path).
 
 SQL load (§3.2.2 names it the scaling bottleneck): all per-pass derived
 state lives in a :class:`PassCache`, discarded at the end of the pass so
@@ -127,11 +140,34 @@ class MetaScheduler:
         # §3.3: "choice policies for the job to cancel (for instance by
         # startup date order [...] or by the number of used nodes)"
         self.besteffort_victim_policy = besteffort_victim_policy
+        self.stats = {"passes": 0, "noop_passes": 0}
+        # dirty-flag fast path (see module docstring): armed only by a pass
+        # that wrote nothing, so arming can never race a concurrent writer —
+        # any write during the pass leaves generation != the start snapshot
+        # and the memo stays cold.
+        self._armed = False
+        self._clean_generation = -1
+        self._next_time_event = float("inf")   # earliest granted-reservation
+                                               # start the armed memo ignores
 
     # ------------------------------------------------------------ main pass
     def run(self) -> dict:
-        """One full scheduling pass. Returns a summary for logging/tests."""
+        """One scheduling pass. Returns a summary for logging/tests.
+
+        O(1) when nothing changed: if the previous pass is armed (it wrote
+        nothing), the store generation is untouched and no granted
+        reservation has come due, the previous outcome still holds — return
+        a no-op summary without touching SQL. Otherwise: full stateless
+        rebuild from the DB.
+        """
         now = self.clock()
+        if (self._armed and self.db.generation == self._clean_generation
+                and now + EPS < self._next_time_event):
+            self.stats["noop_passes"] += 1
+            return {"now": now, "launched": [], "reservations": [],
+                    "preempted": [], "noop": True}
+        self._armed = False
+        generation0 = self.db.generation
         summary = {"now": now, "launched": [], "reservations": [], "preempted": []}
 
         alive = self._alive_resources()
@@ -141,9 +177,41 @@ class MetaScheduler:
         placements = self._schedule_queues(gantt, cache, now, summary)
         self._launch_due(placements, now, summary)
         self._preempt_besteffort(cache, placements, now, summary)
+        if self.db.generation == generation0:
+            # the pass wrote nothing: the DB we read is the DB we leave, so
+            # the (empty) outcome is reusable until a write or a granted
+            # reservation's start invalidates it. Reservations due <= now
+            # were fired above (firing writes, so we would not be here).
+            self._armed = True
+            self._clean_generation = generation0
+            self._next_time_event = self._min_reservation_start()
+        self.stats["passes"] += 1
         self.db.log_event("metascheduler", "info",
                           f"pass at {now:.3f}: launched={len(summary['launched'])}")
         return summary
+
+    def next_deadline(self, now: float | None = None) -> float | None:
+        """Earliest future instant this module must act at even if no new
+        notification arrives: the next granted reservation's start time.
+        Free when the dirty-flag memo is armed (the arming pass cached it);
+        one indexed MIN otherwise. The central module aggregates this for
+        its own wake-up planning (and the simulator plans virtual-time
+        wake-ups from it)."""
+        if self._armed and self.db.generation == self._clean_generation:
+            t = self._next_time_event
+        else:
+            t = self._min_reservation_start()
+        if t == float("inf") or (now is not None and t <= now + EPS):
+            return None
+        return t
+
+    def _min_reservation_start(self) -> float:
+        """Earliest granted-but-unfired reservation start (inf if none) —
+        the one way work becomes due by time alone."""
+        t = self.db.scalar(
+            "SELECT MIN(reservationStart) FROM jobs WHERE state='Waiting' "
+            "AND reservation='Scheduled'")
+        return t if t is not None else float("inf")
 
     # ----------------------------------------------------------- gantt init
     def _alive_resources(self) -> set[int]:

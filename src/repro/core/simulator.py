@@ -7,8 +7,29 @@ scheduling experiments" — run at thousands-of-nodes scale on one machine.
 Only two things are virtual: the passage of time and the job payloads
 (each job carries an ``actual duration``; completion is an event).
 
-Used by benchmarks/esp2.py (figs. 4-8, table 3), benchmarks/scale.py and the
-fault-tolerance tests (node-failure injection mid-run).
+The loop is event-driven end to end (docs/ARCHITECTURE.md has the diagram):
+
+* Events live in one indexed next-wakeup heap, ordered by (time, push
+  sequence) — simultaneous events process in submission order,
+  deterministically.
+* At each instant, all same-instant events are applied first, then the
+  central automaton ticks until quiescent (it coalesces the redundant
+  notifications, §2.2 — a burst arriving together is scheduled together).
+* Completions are tracked incrementally: a job-state observer on the single
+  legal write path (``jobstate.set_state``) reports every transition, so jobs
+  entering 'Running' get their completion event pushed in O(changed) — no
+  jobs-table rescans per event.
+* Usage sampling is O(changed) too: procs-in-use is maintained by the same
+  observer (+ at 'toLaunch', − at 'Terminated'/'toError').
+* Between events, the simulator asks the central module for its *next
+  deadline* (the earliest instant a module must act without any new
+  notification — e.g. a granted reservation's start) and plans one "tick"
+  wake-up there. The earliest planned wake-up is indexed, not searched for
+  in the heap.
+
+Used by benchmarks/esp2.py (figs. 4-8, table 3), benchmarks/scale.py
+(including the 100k-job trace) and the fault-tolerance tests (node-failure
+injection mid-run).
 """
 
 from __future__ import annotations
@@ -59,12 +80,21 @@ class JobRecord:
 
 
 class ClusterSimulator:
+    """A virtual cluster around the real control plane.
+
+    Queue future events with :meth:`submit` / :meth:`fail_node` /
+    :meth:`revive_node` / :meth:`add_nodes`, then :meth:`run` them; the
+    return value is one :class:`JobRecord` per known job. See the README
+    "Simulation" section for a walkthrough.
+    """
+
     def __init__(self, *, n_nodes: int = 17, weight: int = 2, pods: int = 1,
                  switches_per_pod: int = 1,
                  policy: str = "fifo_backfill", db_path: str = ":memory:",
                  check_nodes: bool = False, transport: SimTransport | None = None,
                  victim_policy: str = "youngest_first",
-                 scheduler_period: float = 30.0):
+                 scheduler_period: float = 30.0,
+                 periods: dict[str, float] | None = None):
         self.now = 0.0
         self._seq = itertools.count()
         self._heap: list[_Event] = []
@@ -98,12 +128,26 @@ class ClusterSimulator:
         executor = Executor(self.db, clock=clock,
                             launcher=TaktukLauncher(self.transport),
                             check_nodes=check_nodes)
+        # periodic redundancy in *virtual* time: scheduler_period is the
+        # common knob (ESP runs disable it with a huge value); periods= can
+        # retune any task, e.g. {"monitor": 3600.0} to make full-cluster
+        # reachability sweeps hourly instead of per-minute
         self.central = CentralModule(
             self.db, clock=clock, scheduler=scheduler, executor=executor,
-            periods={"scheduler": scheduler_period})
+            periods={"scheduler": scheduler_period, **(periods or {})})
         self.records: dict[int, JobRecord] = {}
         self._completion_scheduled: set[int] = set()
         self.trace: list[tuple[float, int]] = []  # (t, procs_in_use) for figs 4-8
+        # incremental bookkeeping, fed by the job-state observer: jobs that
+        # newly entered Running (need a completion event), procs-in-use, and
+        # the earliest planned wake-up (so planning one is O(1), not a heap
+        # scan)
+        self._newly_running: list[int] = []
+        self._job_procs: dict[int, int] = {}
+        self._procs_in_use = 0
+        self._usage_dirty = True      # record the t=0 idle point
+        self._next_wakeup: float | None = None
+        self.db.add_state_observer(self._observe_state)
 
     # ---------------------------------------------------------------- events
     def _push(self, t: float, kind: str, payload: Any = None) -> None:
@@ -115,9 +159,19 @@ class ClusterSimulator:
                properties: str = "", reservation_start: float | None = None,
                best_effort: bool | None = None, tag: str = "",
                request: str | None = None) -> None:
-        """Queue a submission event. ``request`` is a resource-request
-        language string (hierarchical / moldable); when given it replaces
-        the flat nb_nodes/weight/properties triple."""
+        """Queue a submission event at virtual time ``at``.
+
+        ``duration`` is the job's *actual* run time (virtual); ``max_time``
+        its declared walltime (defaults to ``duration × 1.25 + 1``, so the
+        estimate is honest but loose — pass ``max_time=duration`` for exact
+        estimates, or less to exercise walltime enforcement). ``request`` is
+        a resource-request language string (hierarchical / moldable — see
+        the README grammar and ``repro.core.request``); when given it
+        replaces the flat ``nb_nodes``/``weight``/``properties`` triple.
+        ``reservation_start`` asks for an exact slot (the fig. 1
+        ``toAckReservation`` negotiation); ``queue`` routes to a queue
+        ("interactive", "default", "besteffort" by default).
+        """
         self._push(at, "submit", {
             "duration": duration, "nb_nodes": nb_nodes, "weight": weight,
             "max_time": max_time if max_time is not None else duration * 1.25 + 1.0,
@@ -126,21 +180,37 @@ class ClusterSimulator:
             "tag": tag, "request": request})
 
     def fail_node(self, at: float, hostname: str) -> None:
+        """Make ``hostname`` unreachable from time ``at``: the next
+        monitoring sweep marks it Suspected and fails jobs running there
+        (which best-effort resubmission or a new submission can pick up)."""
         self._push(at, "fail", hostname)
 
     def revive_node(self, at: float, hostname: str) -> None:
+        """Opposite of :meth:`fail_node`: the host answers again from ``at``
+        and the next sweep returns it to Alive (elastic recovery)."""
         self._push(at, "revive", hostname)
 
     def add_nodes(self, at: float, hostnames: list[str], **kw) -> None:
+        """Elastic scale-up at time ``at``: new resources are schedulable
+        from the next pass. ``kw`` forwards to :func:`api.add_resources`
+        (weight=, pod=, switch=, mem_gb=, chip=)."""
         self._push(at, "grow", (hostnames, kw))
 
     # ------------------------------------------------------------------ run
     def run(self, until: float | None = None) -> list[JobRecord]:
+        """Process events (all of them, or up to virtual time ``until``).
+
+        Returns the :class:`JobRecord` list sorted by job id — including
+        still-waiting/running jobs when a horizon cut the run short. Calling
+        ``run`` again resumes from where the horizon stopped; events beyond
+        the horizon stay queued (including the first one past it).
+        """
         self._drain()
         while self._heap:
             ev = heapq.heappop(self._heap)
             if until is not None and ev.time > until:
-                self.now = until
+                heapq.heappush(self._heap, ev)   # keep it: a resumed run()
+                self.now = until                 # must still see this event
                 break
             self.now = max(self.now, ev.time)
             getattr(self, f"_on_{ev.kind}")(ev.payload)
@@ -151,18 +221,60 @@ class ClusterSimulator:
                 ev2 = heapq.heappop(self._heap)
                 getattr(self, f"_on_{ev2.kind}")(ev2.payload)
             self._drain()
-        self._refresh_records()
         return sorted(self.records.values(), key=lambda r: r.idJob)
 
     def _drain(self) -> None:
-        """Tick the central module until quiescent, then plan wake-ups."""
-        for _ in range(1000):
-            self.central.tick()
-            if not self.central.has_pending:
+        """Run the central automaton to quiescence, then plan wake-ups.
+
+        The automaton ticks only while something is actually due — a pending
+        notification bit or a periodic task whose virtual period elapsed —
+        so an event that wakes nobody costs nothing. Mid-pass notifications
+        land in the pending bits and are drained here too (bounded: the
+        modules converge because every action either changes job state
+        toward a final state or writes nothing and stops notifying).
+        """
+        central = self.central
+        for _ in range(1000):   # defensive bound, as in the daemon loop
+            if not (central.has_pending or central.periodic_due(self.now)):
                 break
-        self._schedule_completions()
-        self._schedule_wakeups()
-        self._sample_usage()
+            central.tick()
+        self._plan_completions()
+        self._plan_wakeup()
+        if self._usage_dirty:
+            self._usage_dirty = False
+            if not self.trace or self.trace[-1][1] != self._procs_in_use:
+                self.trace.append((self.now, self._procs_in_use))
+
+    # ------------------------------------------------------- state observer
+    def _observe_state(self, jid: int, old: str, new: str) -> None:
+        """Incremental bookkeeping on the single legal write path: every
+        state transition in the whole system funnels through
+        ``jobstate.set_state``, which reports here. O(1) per transition
+        (plus one per-job assignment query at 'toLaunch')."""
+        if new == jobstate.RUNNING:
+            self._newly_running.append(jid)
+        elif new == jobstate.TO_LAUNCH:
+            procs = self.db.scalar(
+                "SELECT COALESCE(SUM(r.weight),0) FROM assignments a "
+                "JOIN resources r ON r.idResource=a.idResource "
+                "WHERE a.idJob=?", (jid,)) or 0
+            self._procs_in_use += procs - self._job_procs.get(jid, 0)
+            self._job_procs[jid] = procs
+            self._usage_dirty = True
+        elif new in (jobstate.TERMINATED, jobstate.TO_ERROR):
+            procs = self._job_procs.pop(jid, 0)
+            if procs:
+                self._procs_in_use -= procs
+                self._usage_dirty = True
+        rec = self.records.get(jid)
+        if rec is not None:
+            rec.state = new
+            if new == jobstate.RUNNING and rec.start is None:
+                rec.start = self.now
+            elif rec.stop is None and new in (jobstate.TERMINATED,
+                                              jobstate.ERROR,
+                                              jobstate.TO_ERROR):
+                rec.stop = self.now
 
     # ----------------------------------------------------------- event kinds
     def _on_submit(self, p: dict) -> None:
@@ -181,7 +293,8 @@ class ClusterSimulator:
             procs = row["nbNodes"] * row["weight"]
         else:
             procs = p["nb_nodes"] * p["weight"]
-        self.records[jid] = JobRecord(jid, self.now, p["duration"], procs)
+        self.records[jid] = JobRecord(jid, self.now, p["duration"], procs,
+                                      state=jobstate.WAITING)
 
     def _on_complete(self, payload: tuple[int, bool, str]) -> None:
         jid, ok, msg = payload
@@ -191,6 +304,8 @@ class ClusterSimulator:
     def _on_tick(self, _p) -> None:
         # a planned wake-up exists to let the scheduler act (e.g. a granted
         # reservation whose start time has come) — notify it explicitly
+        if self._next_wakeup is not None and self._next_wakeup <= self.now + EPS:
+            self._next_wakeup = None
         self.db.notify("scheduler")
 
     def _on_fail(self, hostname: str) -> None:
@@ -206,15 +321,20 @@ class ClusterSimulator:
         api.add_resources(self.db, hostnames, **kw)
 
     # ----------------------------------------------------------- bookkeeping
-    def _schedule_completions(self) -> None:
-        rows = self.db.query(
-            "SELECT idJob, startTime, maxTime, weight, command FROM jobs "
-            "WHERE state='Running'")
-        for r in rows:
-            jid = r["idJob"]
+    def _plan_completions(self) -> None:
+        """Push the completion event for each job that newly entered Running
+        this drain — O(changed), fed by the state observer instead of a
+        jobs-table rescan."""
+        while self._newly_running:
+            jid = self._newly_running.pop()
             if jid in self._completion_scheduled:
                 continue
             self._completion_scheduled.add(jid)
+            r = self.db.query_one(
+                "SELECT startTime, maxTime, weight, command FROM jobs "
+                "WHERE idJob=? AND state='Running'", (jid,))
+            if r is None:          # cancelled again within the same drain
+                continue
             try:
                 duration = json.loads(r["command"]).get("duration", r["maxTime"])
             except (ValueError, TypeError):
@@ -223,7 +343,8 @@ class ClusterSimulator:
                 self.records[jid].start = r["startTime"]
             else:  # resubmitted best-effort clones
                 self.records[jid] = JobRecord(jid, r["startTime"], duration, 0,
-                                              start=r["startTime"])
+                                              start=r["startTime"],
+                                              state=jobstate.RUNNING)
             self.records[jid].resources = frozenset(
                 row["idResource"] for row in self.db.query(
                     "SELECT idResource FROM assignments WHERE idJob=?", (jid,)))
@@ -237,33 +358,21 @@ class ClusterSimulator:
             else:
                 self._push(r["startTime"] + duration, "complete", (jid, True, ""))
 
-    def _schedule_wakeups(self) -> None:
+    def _plan_wakeup(self) -> None:
         """Virtual-time analogue of periodic redundancy: wake at the next
-        time anything can change (granted reservation start)."""
-        t = self.db.scalar(
-            "SELECT MIN(reservationStart) FROM jobs WHERE state='Waiting' "
-            "AND reservation='Scheduled' AND reservationStart > ?", (self.now + EPS,))
-        if t is not None and not any(
-                e.kind == "tick" and abs(e.time - t) < EPS for e in self._heap):
-            self._push(t, "tick")
-
-    def _sample_usage(self) -> None:
-        used = self.db.scalar(
-            "SELECT COALESCE(SUM(r.weight),0) FROM assignments a "
-            "JOIN resources r ON r.idResource=a.idResource "
-            "JOIN jobs j ON j.idJob=a.idJob WHERE j.state IN "
-            "('toLaunch','Launching','Running')") or 0
-        if not self.trace or self.trace[-1][1] != used:
-            self.trace.append((self.now, used))
-
-    def _refresh_records(self) -> None:
-        for row in self.db.query(
-                "SELECT idJob, state, startTime, stopTime FROM jobs"):
-            rec = self.records.get(row["idJob"])
-            if rec is not None:
-                rec.state = row["state"]
-                rec.start = row["startTime"]
-                rec.stop = row["stopTime"]
+        time anything can change without an event, as reported by the
+        central module (today: the next granted reservation's start). O(1) —
+        the earliest planned wake-up is indexed in ``_next_wakeup``, never
+        searched for in the heap. A wake-up made stale by an earlier one
+        still fires, finds an armed no-op pass, and costs O(1)."""
+        t = self.central.next_deadline(self.now)
+        if t is None:
+            return
+        if self._next_wakeup is not None and \
+                self.now + EPS < self._next_wakeup <= t + EPS:
+            return    # an earlier-or-equal wake-up is already planned
+        self._push(t, "tick")
+        self._next_wakeup = t
 
     # ------------------------------------------------------------- analysis
     def utilisation(self, horizon: float | None = None) -> float:

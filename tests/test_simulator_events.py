@@ -1,0 +1,181 @@
+"""Event-loop semantics of the heap-driven simulator and the dirty-flag
+scheduler fast path: horizon resume, same-instant coalescing (§2.2
+redundant-notification discard), deterministic ordering at equal
+timestamps, O(1) no-op passes, and the crash-restart full-rebuild
+recovery path (the paper's robustness contract)."""
+
+from repro.core import (CentralModule, ClusterSimulator, Executor,
+                        MetaScheduler, api, connect)
+
+
+# ------------------------------------------------------------ run(until=)
+def test_until_horizon_does_not_drop_first_future_event():
+    """Regression: the first event beyond the horizon used to be popped and
+    discarded on break, so a resumed run() silently lost it."""
+    sim = ClusterSimulator(n_nodes=1, weight=1)
+    sim.submit(10.0, duration=5, nb_nodes=1, max_time=10)
+    recs = sim.run(until=5.0)
+    assert recs == [] and sim.now == 5.0        # nothing happened yet
+    recs = sim.run()                            # resume: event must survive
+    assert len(recs) == 1 and recs[0].state == "Terminated"
+    assert recs[0].submit == 10.0 and recs[0].stop == 15.0
+
+
+def test_until_horizon_resume_is_equivalent_to_one_run():
+    scenario = [(0.0, 10, 1), (0.0, 10, 1), (3.0, 5, 2), (12.0, 4, 1)]
+
+    def build():
+        sim = ClusterSimulator(n_nodes=2, weight=1)
+        for at, dur, n in scenario:
+            sim.submit(at, duration=dur, nb_nodes=n, max_time=dur)
+        return sim
+
+    whole = build().run()
+    chunked_sim = build()
+    for horizon in (2.0, 5.0, 11.0, 20.0):
+        chunked_sim.run(until=horizon)
+    chunked = chunked_sim.run()
+    assert [(r.idJob, r.state, r.start, r.stop) for r in whole] == \
+           [(r.idJob, r.state, r.start, r.stop) for r in chunked]
+
+
+# ------------------------------------------------------------- coalescing
+def test_same_instant_burst_scheduled_together():
+    """A burst arriving at one instant is applied wholly before the
+    automaton reacts: the redundant notifications are discarded (§2.2) and
+    the whole burst is placed by a handful of passes, not one per job."""
+    sim = ClusterSimulator(n_nodes=8, weight=1, scheduler_period=1e9)
+    for _ in range(8):
+        sim.submit(0.0, duration=5, nb_nodes=1, max_time=10)
+    recs = sim.run()
+    assert all(r.state == "Terminated" and r.start == 0.0 for r in recs)
+    assert sim.central.stats["discarded"] >= 7        # 8 submits, 1 wake
+    assert sim.central.scheduler.stats["passes"] <= 4
+
+
+def test_idle_cluster_drains_are_noop_passes():
+    """After the burst completes, every further wake of the scheduler hits
+    the armed dirty-flag memo (nothing changed) instead of a rebuild."""
+    sim = ClusterSimulator(n_nodes=4, weight=1)
+    sim.submit(0.0, duration=5, nb_nodes=1, max_time=10)
+    sim.run(until=1000.0)
+    q0 = sim.db.query_count
+    n0 = sim.central.scheduler.stats["noop_passes"]
+    sim.db.notify("scheduler")        # redundant wake on an idle cluster
+    sim.central.tick()
+    assert sim.central.scheduler.stats["noop_passes"] == n0 + 1
+    assert sim.db.query_count == q0   # zero SQL for the no-op pass
+
+
+# ---------------------------------------------------- deterministic order
+def test_equal_timestamp_events_apply_in_push_order():
+    """Tie-broken by push sequence: fail-then-revive leaves the node alive,
+    revive-then-fail leaves it dead — deterministically."""
+    up = ClusterSimulator(n_nodes=1, weight=1)
+    up.fail_node(5.0, "pod0-host0")
+    up.revive_node(5.0, "pod0-host0")
+    up.submit(5.0, duration=3, nb_nodes=1, max_time=10)
+    assert up.run(until=100.0)[0].state == "Terminated"
+
+    down = ClusterSimulator(n_nodes=1, weight=1)
+    down.revive_node(5.0, "pod0-host0")
+    down.fail_node(5.0, "pod0-host0")
+    down.submit(5.0, duration=3, nb_nodes=1, max_time=10)
+    assert down.run(until=100.0)[0].state == "Waiting"   # no alive node
+
+
+def test_replays_are_identical():
+    def once():
+        sim = ClusterSimulator(n_nodes=4, weight=2, policy="sjf_resources")
+        sim.submit(0.0, duration=30, nb_nodes=2, max_time=40)
+        sim.submit(0.0, duration=10, nb_nodes=4, max_time=15)
+        sim.submit(0.0, duration=10, nb_nodes=1, max_time=15,
+                   queue="besteffort")
+        sim.fail_node(20.0, "pod0-host3")
+        sim.submit(20.0, duration=5, nb_nodes=1, max_time=10)
+        recs = sim.run(until=500.0)
+        return ([(r.idJob, r.state, r.start, r.stop, r.procs) for r in recs],
+                sim.trace)
+    assert once() == once()
+
+
+# ------------------------------------------------------- usage accounting
+def test_incremental_usage_trace_matches_schedule():
+    sim = ClusterSimulator(n_nodes=2, weight=1)
+    sim.submit(0.0, duration=10, nb_nodes=2, max_time=20)
+    sim.run()
+    # 2 procs × 10 s on a 2-proc cluster over a 10 s makespan
+    assert abs(sim.utilisation() - 1.0) < 1e-9
+    assert (0.0, 2) in sim.trace and sim.trace[-1] == (10.0, 0)
+
+
+# ------------------------------------------------------- dirty-flag memo
+def _cluster(n=4):
+    db = connect()
+    api.add_resources(db, [f"h{i}" for i in range(n)])
+    return db
+
+
+def test_noop_pass_is_zero_sql():
+    """CI guard: an unchanged pass must not touch the database at all."""
+    db = _cluster()
+    sched = MetaScheduler(db)
+    api.oarsub(db, "x", max_time=60)
+    sched.run()                     # places the job (writes -> cold)
+    sched.run()                     # nothing to do, no writes -> arms
+    q0, g0 = db.query_count, db.generation
+    summary = sched.run()
+    assert summary.get("noop") is True
+    assert db.query_count == q0 and db.generation == g0
+    assert sched.stats["noop_passes"] == 1
+
+
+def test_any_write_invalidates_the_memo():
+    db = _cluster()
+    sched = MetaScheduler(db)
+    sched.run(); sched.run()
+    assert sched.run().get("noop") is True
+    jid = api.oarsub(db, "x", max_time=60)      # a write: generation bump
+    summary = sched.run()
+    assert summary.get("noop") is None and jid in summary["launched"]
+
+
+def test_granted_reservation_start_invalidates_the_memo():
+    """Time alone can make work due: a granted reservation must fire even
+    though nothing wrote to the store in between."""
+    db = _cluster()
+    now = {"t": 0.0}
+    sched = MetaScheduler(db, clock=lambda: now["t"])
+    api.oarsub(db, "x", nb_nodes=1, max_time=10, reservation_start=100.0,
+               clock=lambda: now["t"])
+    sched.run()                      # grants the slot (writes -> cold)
+    sched.run()                      # arms, remembering the 100.0 deadline
+    assert sched.next_deadline() == 100.0
+    now["t"] = 50.0
+    assert sched.run().get("noop") is True        # before the slot: skip
+    now["t"] = 100.0
+    summary = sched.run()                         # due: full pass fires it
+    assert summary.get("noop") is None and summary["launched"]
+
+
+def test_crash_restart_falls_back_to_full_rebuild(tmp_path):
+    """The recovery contract: the memo is per-process; a restarted control
+    plane rebuilds everything from the store and resumes mid-flight jobs."""
+    path = str(tmp_path / "oar.db")
+    db = connect(path, fresh=True)
+    api.add_resources(db, ["h0", "h1"])
+    api.oarsub(db, "x", max_time=60)
+    sched = MetaScheduler(db)
+    sched.run()                                   # schedules...
+    assert db.scalar("SELECT state FROM jobs") == "toLaunch"
+    sched.run(); sched.run()
+    assert sched.stats["noop_passes"] >= 1        # memo armed pre-crash
+    db.close()                                    # ...then the plane dies
+
+    db2 = connect(path)                           # restart against the store
+    sched2 = MetaScheduler(db2)
+    central = CentralModule(db2, scheduler=sched2,
+                            executor=Executor(db2, check_nodes=False))
+    central.tick()
+    assert sched2.stats == {"passes": 1, "noop_passes": 0}   # full rebuild
+    assert db2.scalar("SELECT state FROM jobs") == "Running"
