@@ -42,7 +42,8 @@ def _headline(results) -> object | None:
 
 def write_bench_sched(path: str = BENCH_PATH, *, scale_results=None,
                       burst_results=None, hier_results=None,
-                      trace_result=None, smoke: bool | None = None) -> dict:
+                      trace_result=None, edf_passes=None, edf_workload=None,
+                      smoke: bool | None = None) -> dict:
     """Merge suite results into BENCH_sched.json (section per suite, so
     scale, the hierarchical-request variant and burst can each emit
     independently without clobbering)."""
@@ -85,6 +86,25 @@ def write_bench_sched(path: str = BENCH_PATH, *, scale_results=None,
                 "sql_per_noop_pass": r.sql_per_noop_pass,
                 "full_over_noop": round(r.schedule_pass_s / r.noop_pass_s, 1),
             }
+    if edf_passes is not None or edf_workload is not None:
+        # the deadline tier: EDF-policy pass cost over a deadline-bearing
+        # backlog (tracked against the same frozen flat-seed baseline) and
+        # the deadline-hit-rate comparison vs the FIFO baseline on an
+        # identical workload — hit_rate[edf] >= hit_rate[fifo_backfill] is
+        # the acceptance bar, guarded by the CI smoke check
+        section: dict = {}
+        if edf_passes is not None:
+            section["pass"] = [dataclasses.asdict(r) for r in edf_passes]
+            r = _headline(edf_passes)
+            if r is not None and not smoke:
+                section["speedup_vs_seed"] = _speedup(r)
+        if edf_workload is not None:
+            section["workload"] = [dataclasses.asdict(w) for w in edf_workload]
+            rates = {w.policy: w.hit_rate for w in edf_workload}
+            if "edf" in rates and "fifo_backfill" in rates:
+                section["hit_rate_edf"] = rates["edf"]
+                section["hit_rate_fifo"] = rates["fifo_backfill"]
+        payload["edf_smoke" if smoke else "edf"] = section
     if trace_result is not None:
         # end-to-end simulator trace (100k jobs full-scale): the number that
         # says whether the event-driven loop holds up over a long run

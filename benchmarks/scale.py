@@ -39,6 +39,22 @@ class ScaleResult:
     sql_per_pass: float
     noop_pass_s: float = 0.0          # armed dirty-flag pass (O(1) target)
     sql_per_noop_pass: float = 0.0
+    gantt_slots: int = 0              # timeline length after the pass (the
+                                      # lazy-coalescing follow-on keeps it
+                                      # near #distinct job end times)
+
+
+@dataclass
+class EdfWorkloadResult:
+    policy: str
+    nodes: int
+    jobs: int
+    completed: int
+    deadline_jobs: int
+    deadline_hits: int
+    hit_rate: float
+    mean_slack_s: float
+    makespan_s: float
 
 
 @dataclass
@@ -73,7 +89,8 @@ def _hier_request(n: int, rng) -> str:
 
 
 def run_one(n_nodes: int, backlog: int = 500, *, seed: int = 0,
-            hierarchical: bool = False) -> ScaleResult:
+            hierarchical: bool = False, policy: str | None = None,
+            deadlines: bool = False) -> ScaleResult:
     db = connect()
     pods = max(1, n_nodes // 256)
     switches_per_pod = 4 if hierarchical else 1
@@ -89,16 +106,30 @@ def run_one(n_nodes: int, backlog: int = 500, *, seed: int = 0,
                               weight=4, pod=p,
                               switch=f"sw{p}.{s}" if switches_per_pod > 1
                               else f"sw{p}")
+    if policy is not None:
+        with db.transaction() as cur:
+            cur.execute("UPDATE queues SET policy=?", (policy,))
     rng = random.Random(seed)
     now = 1000.0
     for _ in range(backlog):
+        # draw order matters: request (hier) then max_time, exactly as the
+        # pre-deadline code evaluated its kwargs — the recorded BENCH series
+        # is comparable across PRs only if the seeded trace stays identical.
+        # The deadline draw is appended after, so deadline-less runs (every
+        # pre-existing section) consume the identical stream.
         n = rng.choice([1, 2, 4, 8, 16, 64, 256])
+        request = _hier_request(n, rng) if hierarchical else None
+        max_time = rng.uniform(600, 86400)
+        # a reachable Libra-style deadline on every job (rule 12 floor ×
+        # a spread of urgency) so the EDF comparator has real work to do
+        deadline = (now + max_time * rng.uniform(1.0, 4.0)) if deadlines \
+            else None
         if hierarchical:
-            api.oarsub(db, "work", request=_hier_request(n, rng),
-                       max_time=rng.uniform(600, 86400), clock=lambda: now)
+            api.oarsub(db, "work", request=request, max_time=max_time,
+                       deadline=deadline, clock=lambda: now)
         else:
-            api.oarsub(db, "work", nb_nodes=n,
-                       max_time=rng.uniform(600, 86400), clock=lambda: now)
+            api.oarsub(db, "work", nb_nodes=n, max_time=max_time,
+                       deadline=deadline, clock=lambda: now)
     sched = MetaScheduler(db, clock=lambda: now)
     q0 = db.query_count
     t0 = time.perf_counter()
@@ -128,7 +159,7 @@ def run_one(n_nodes: int, backlog: int = 500, *, seed: int = 0,
     t_wall = time.perf_counter() - t0
     db.close()
     return ScaleResult(n_nodes, backlog, t_pass, rep.virtual_time, t_wall,
-                       sql / 1.0, t_noop, sql_noop)
+                       sql / 1.0, t_noop, sql_noop, sched.gantt_slots)
 
 
 def run_trace(n_jobs: int = 100_000, n_nodes: int = 512, *, batch: int = 45,
@@ -169,11 +200,46 @@ def run_trace(n_jobs: int = 100_000, n_nodes: int = 512, *, batch: int = 45,
                        sim.db.query_count, n_jobs / wall)
 
 
+def run_edf_workload(policy: str, *, n_nodes: int = 64, n_jobs: int = 150,
+                     seed: int = 0) -> EdfWorkloadResult:
+    """Deadline workload for the `edf` BENCH section: every job carries a
+    Libra-style deadline with a spread of urgency (×1.5..×12 of its own
+    runtime), submitted over the first 1000 virtual seconds of a saturated
+    cluster (~4 hours of work behind the last arrival). A policy that
+    ignores deadlines (the FIFO baseline) burns the tight ones deep in the
+    queue; the EDF tier reorders and hits them — the section records the
+    hit rate of both on the *identical* workload."""
+    sim = ClusterSimulator(n_nodes=n_nodes, weight=1, policy=policy,
+                           scheduler_period=1e9,
+                           periods={"monitor": 1e9, "cancel": 1e9,
+                                    "resubmit": 1e9})
+    rng = random.Random(seed)
+    for _ in range(n_jobs):
+        at = rng.uniform(0.0, 1000.0)
+        duration = rng.uniform(300.0, 900.0)
+        hosts = rng.randint(4, 16)
+        sim.submit(at, duration=duration, nb_nodes=hosts, max_time=duration,
+                   deadline=at + duration * rng.uniform(1.5, 12.0))
+    records = sim.run()
+    dm = sim.deadline_metrics()
+    return EdfWorkloadResult(
+        policy=policy, nodes=n_nodes, jobs=len(records),
+        completed=sum(1 for r in records if r.state == "Terminated"),
+        deadline_jobs=dm["jobs"], deadline_hits=dm["hits"],
+        hit_rate=round(dm["hit_rate"], 4),
+        mean_slack_s=round(dm["mean_slack_s"], 1),
+        makespan_s=round(sim.now, 1))
+
+
 SIZES = (100, 1000, 4096, 10000)
 SMOKE_SIZES = (1000,)  # tier-1 time budget: one fast point, same backlog
 HIER_SIZES = (1000, 10000)  # hierarchical variant: fast point + headline
+EDF_SIZES = (10000,)        # EDF pass margin is a headline-size claim
+SMOKE_EDF_SIZES = (1000,)
 TRACE_JOBS = 100_000
 SMOKE_TRACE_JOBS = 2_000
+EDF_WORKLOAD_JOBS = 150
+SMOKE_EDF_WORKLOAD_JOBS = 60
 
 
 def run(sizes=SIZES) -> list[ScaleResult]:
@@ -184,14 +250,38 @@ def run_hier(sizes=HIER_SIZES) -> list[ScaleResult]:
     return [run_one(n, hierarchical=True) for n in sizes]
 
 
+def run_edf(sizes=EDF_SIZES, *, n_jobs: int = EDF_WORKLOAD_JOBS,
+            n_nodes: int = 64
+            ) -> tuple[list[ScaleResult], list[EdfWorkloadResult]]:
+    """The `edf` section: (a) full-pass wall/SQL with the EDF policy over a
+    deadline-bearing backlog at the headline size — the proof the deadline
+    tier keeps the seed margins; (b) the deadline workload hit-rate
+    comparison, FIFO baseline vs EDF on identical submissions."""
+    passes = [run_one(n, policy="edf", deadlines=True) for n in sizes]
+    workload = [run_edf_workload(p, n_nodes=n_nodes, n_jobs=n_jobs)
+                for p in ("fifo_backfill", "edf")]
+    return passes, workload
+
+
 def _print_table(results: list[ScaleResult]) -> None:
     print(f"{'nodes':>6s} {'sched_pass_s':>13s} {'SQL/pass':>9s} "
-          f"{'noop_pass_us':>13s} {'SQL/noop':>9s} "
+          f"{'noop_pass_us':>13s} {'SQL/noop':>9s} {'slots':>6s} "
           f"{'taktuk_model_s':>15s} {'taktuk_wall_s':>14s}")
     for r in results:
         print(f"{r.nodes:6d} {r.schedule_pass_s:13.3f} {r.sql_per_pass:9.0f} "
               f"{r.noop_pass_s * 1e6:13.1f} {r.sql_per_noop_pass:9.2f} "
+              f"{r.gantt_slots:6d} "
               f"{r.monitor_sweep_modelled_s:15.3f} {r.monitor_sweep_wall_s:14.3f}")
+
+
+def _print_edf(workload: list[EdfWorkloadResult]) -> None:
+    print(f"{'policy':>14s} {'nodes':>6s} {'jobs':>5s} {'done':>5s} "
+          f"{'hits':>5s} {'hit_rate':>9s} {'mean_slack_s':>13s} "
+          f"{'makespan_s':>11s}")
+    for w in workload:
+        print(f"{w.policy:>14s} {w.nodes:6d} {w.jobs:5d} {w.completed:5d} "
+              f"{w.deadline_hits:5d} {w.hit_rate:9.4f} {w.mean_slack_s:13.1f} "
+              f"{w.makespan_s:11.1f}")
 
 
 def _print_trace(r: TraceResult) -> None:
@@ -218,10 +308,19 @@ def main(argv: list[str] | None = None, *, smoke: bool = False) -> list[ScaleRes
           "no-op passes)")
     trace = run_trace(SMOKE_TRACE_JOBS if smoke else TRACE_JOBS)
     _print_trace(trace)
+    print("# EDF deadline tier: pass margin on a deadline-bearing backlog + "
+          "hit-rate vs the FIFO baseline on an identical workload")
+    edf_passes, edf_workload = run_edf(
+        SMOKE_EDF_SIZES if smoke else EDF_SIZES,
+        n_jobs=SMOKE_EDF_WORKLOAD_JOBS if smoke else EDF_WORKLOAD_JOBS,
+        n_nodes=32 if smoke else 64)
+    _print_table(edf_passes)
+    _print_edf(edf_workload)
     # deferred so direct-script runs can fix sys.path in __main__ first
     from benchmarks.record import write_bench_sched
     write_bench_sched(scale_results=results, hier_results=hier,
-                      trace_result=trace, smoke=smoke)
+                      trace_result=trace, edf_passes=edf_passes,
+                      edf_workload=edf_workload, smoke=smoke)
     return results
 
 

@@ -11,8 +11,8 @@ experiments; `api` is the oarsub/oardel/oarstat command set.
 from repro.core.db import Database, connect
 from repro.core.api import (oarsub, oardel, oarstat, oarhold, oarresume,
                             oarnodes, add_resources, remove_resources,
-                            AdmissionError, ClusterClient, JobRequest,
-                            JobInfo, NodeInfo, UnknownJob,
+                            set_queue, AdmissionError, ClusterClient,
+                            JobRequest, JobInfo, NodeInfo, UnknownJob,
                             InvalidStateTransition)
 from repro.core.request import (BadRequest, ResourceRequest, parse_request,
                                 canonical_request)
@@ -23,7 +23,7 @@ from repro.core.simulator import ClusterSimulator
 
 __all__ = [
     "Database", "connect", "oarsub", "oardel", "oarstat", "oarhold",
-    "oarresume", "oarnodes", "add_resources", "remove_resources",
+    "oarresume", "oarnodes", "add_resources", "remove_resources", "set_queue",
     "AdmissionError", "CentralModule", "MetaScheduler", "Executor",
     "TaktukLauncher", "SimTransport", "ClusterSimulator",
     "ClusterClient", "JobRequest", "JobInfo", "NodeInfo",

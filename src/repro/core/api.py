@@ -37,7 +37,7 @@ from repro.core.request import (BadRequest, ResourceRequest, parse_request,
                                 request_from_json, request_to_json)
 
 __all__ = ["oarsub", "oardel", "oarstat", "oarhold", "oarresume", "oarnodes",
-           "add_resources", "remove_resources", "AdmissionError",
+           "add_resources", "remove_resources", "set_queue", "AdmissionError",
            "ClusterClient", "JobRequest", "JobInfo", "NodeInfo",
            "UnknownJob", "InvalidStateTransition"]
 
@@ -105,6 +105,12 @@ def oarsub(db, command: str | dict, *, user: str = "user", queue: str | None = N
         raise BadRequest("pass counts inside the request ('/host=4, "
                          "weight=2'), not via nb_nodes=/weight=")
     alternatives = _normalise_request(request, nb_nodes, weight, properties)
+    req_deadlines = [a.deadline for a in alternatives if a.deadline is not None]
+    if req_deadlines:
+        if deadline is not None:
+            raise BadRequest("pass the deadline either as deadline= or inside "
+                             "the request (', deadline=T'), not both")
+        deadline = min(req_deadlines)  # the tightest contract wins
     first = alternatives[0]
     job: dict[str, Any] = {
         "jobType": job_type, "infoType": info_type, "user": user,
@@ -138,6 +144,13 @@ def oarsub(db, command: str | dict, *, user: str = "user", queue: str | None = N
     job["nbNodes"] = first.min_hosts
     job["weight"] = first.weight
     job["properties"] = validate_properties(first.combined_filter)
+    # the deadline mirror follows the same refresh rule: when it came from
+    # the request grammar (not the explicit keyword) and no rule overrode
+    # job['deadline'] directly, re-derive it from the rewritten alternatives
+    # so jobs.deadline can never contradict the stored resourceRequest
+    if req_deadlines and job.get("deadline") == deadline:
+        rewritten = [a.deadline for a in alternatives if a.deadline is not None]
+        job["deadline"] = min(rewritten) if rewritten else None
     with db.transaction() as cur:
         cur.execute(
             "INSERT INTO jobs(jobType, infoType, user, nbNodes, weight, command,"
@@ -219,6 +232,40 @@ def oarnodes(db) -> list[dict]:
 
 
 # ----------------------------------------------------------- administration
+def set_queue(db, queue: str, *, policy: str | None = None,
+              priority: int | None = None, moldable: str | None = None,
+              state: str | None = None) -> None:
+    """Reconfigure a queue row (the DB *is* the configuration, §2.3):
+    ``policy`` picks the in-queue scheduler (``edf``, ``fifo_backfill``, …),
+    ``moldable`` the alternative-selection mode (``'first'`` = declared
+    order, ``'min_start'`` = earliest-start alternative wins), ``priority``/
+    ``state`` the §2.3 knobs. Takes effect on the next scheduling pass."""
+    if policy is not None:
+        from repro.core.policies import get_policy
+        get_policy(policy)   # KeyError here, not on every later pass
+    if moldable is not None and moldable not in ("first", "min_start"):
+        raise ValueError(f"moldable must be 'first' or 'min_start', "
+                         f"got {moldable!r}")
+    if state is not None and state not in ("Active", "Stopped"):
+        raise ValueError(f"state must be 'Active' or 'Stopped', "
+                         f"got {state!r}")
+    sets, params = [], []
+    for col, val in (("policy", policy), ("priority", priority),
+                     ("moldable", moldable), ("state", state)):
+        if val is not None:
+            sets.append(f"{col}=?")
+            params.append(val)
+    if not sets:
+        return
+    params.append(queue)
+    with db.transaction() as cur:
+        cur.execute(f"UPDATE queues SET {', '.join(sets)} WHERE queueName=?",
+                    params)
+        if cur.rowcount == 0:
+            raise KeyError(f"no such queue {queue!r}")
+    db.notify("scheduler")
+
+
 def add_resources(db, hostnames: list[str], *, weight: int = 1, pod: int = 0,
                   switch: str = "sw0", mem_gb: int = 16,
                   chip: str = "tpu-v5e") -> list[int]:

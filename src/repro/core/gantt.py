@@ -104,12 +104,19 @@ class Gantt:
     ``int`` bitmask; the mask form is the hot path used by the policies.
     """
 
+    # lazy coalescing: merge adjacent equal-mask slots once the timeline
+    # grows past this floor and has doubled since the last merge — amortised
+    # O(1) per mutation, keeps long-running timelines short (churny
+    # occupy/release traffic leaves boundaries where nothing changes)
+    _COALESCE_FLOOR = 64
+
     def __init__(self, resources, origin: float):
         self.origin = float(origin)
         self.index = ResourceIndex(resources)
         self.all_mask = self.index.full_mask
         self.slots: list[Slot] = [Slot(self.origin, INF, self.all_mask)]
         self._starts: list[float] = [self.origin]  # mirror of slot starts
+        self._coalesce_at = self._COALESCE_FLOOR   # next lazy-merge trigger
 
     @property
     def all_resources(self) -> set[int]:
@@ -143,6 +150,8 @@ class Gantt:
             if s.start >= stop:
                 break
             s.free &= inv
+        if len(slots) >= self._coalesce_at:
+            self._coalesce()
 
     def release(self, rids, start: float, stop: float) -> None:
         """Re-add ``rids`` over [start, stop) (used by preemption re-planning)."""
@@ -156,6 +165,30 @@ class Gantt:
             if s.start >= stop:
                 break
             s.free |= mask
+        if len(slots) >= self._coalesce_at:
+            self._coalesce()
+
+    def _coalesce(self) -> None:
+        """Merge adjacent slots whose free masks are equal (the ROADMAP
+        "bitmask Gantt follow-on"). Such boundaries carry no information:
+        no resource is freed or taken there, so they can never be the unique
+        earliest feasible start of a window — `find_slot*` results are
+        unchanged (the differential suite asserts this against the
+        reference). Called lazily from occupy/release once the timeline has
+        doubled since the last merge, so the O(slots) scan amortises to
+        O(1) per mutation."""
+        slots = self.slots
+        out = [slots[0]]
+        for s in slots[1:]:
+            last = out[-1]
+            if s.free == last.free:
+                last.stop = s.stop
+            else:
+                out.append(s)
+        if len(out) != len(slots):
+            self.slots = out
+            self._starts = [s.start for s in out]
+        self._coalesce_at = max(self._COALESCE_FLOOR, 2 * len(self.slots))
 
     # ------------------------------------------------------------- queries
     def free_mask_at(self, t: float) -> int:

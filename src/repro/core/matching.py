@@ -17,6 +17,14 @@ under 1 switch by AND-ing per-level block masks from a
 locality *heuristic* with an actual placement *constraint*; a plain
 ``/host=N`` alternative compiles to no selector at all and schedules through
 the identical legacy ``find_slot_mask`` path.
+
+How the compiled alternatives are *chosen* among is the queue's call
+(``queues.moldable``, consumed by :func:`repro.core.policies.find_fit`):
+``'first'`` keeps the declared-order first-satisfiable contract, and
+``'min_start'`` sweeps every alternative through the Gantt and places the
+earliest-starting one (fragmentation, then declared order, as tie-breaks).
+Compilation is identical either way — the knob only changes the scoring
+loop over this module's output.
 """
 
 from __future__ import annotations

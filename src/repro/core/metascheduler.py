@@ -35,8 +35,10 @@ caches the alive-resource set, and loads every running best-effort job's
 assignment in one grouped query. Typed requests (``jobs.resourceRequest``)
 are compiled once per distinct canonical JSON: per-level block masks come
 from a lazily-built :class:`~repro.core.resourceindex.HierarchyIndex`, and
-moldable alternatives are tried in declared order at placement time
-(:func:`repro.core.policies.find_fit`). Writes are batched (``executemany`` for
+moldable alternatives are resolved at placement time by
+:func:`repro.core.policies.find_fit` — declared-order first-satisfiable by
+default, or min-start scoring when the owning queue sets
+``moldable='min_start'``. Writes are batched (``executemany`` for
 assignment/gantt inserts, one transaction for preemption flags). The pass's
 hot predicates are covered by indexes declared in ``schema.py``.
 """
@@ -141,6 +143,7 @@ class MetaScheduler:
         # startup date order [...] or by the number of used nodes)"
         self.besteffort_victim_policy = besteffort_victim_policy
         self.stats = {"passes": 0, "noop_passes": 0}
+        self.gantt_slots = 0   # timeline length after the latest full pass
         # dirty-flag fast path (see module docstring): armed only by a pass
         # that wrote nothing, so arming can never race a concurrent writer —
         # any write during the pass leaves generation != the start snapshot
@@ -175,6 +178,10 @@ class MetaScheduler:
         cache = PassCache(self.db, gantt.index)
         self._schedule_reservations(gantt, cache, now, summary)
         placements = self._schedule_queues(gantt, cache, now, summary)
+        # timeline length after planning the whole backlog — the number the
+        # lazy coalescing pass in gantt.py keeps bounded (ROADMAP follow-on);
+        # benchmarks/scale.py records it per pass
+        self.gantt_slots = len(gantt.slots)
         self._launch_due(placements, now, summary)
         self._preempt_besteffort(cache, placements, now, summary)
         if self.db.generation == generation0:
@@ -311,10 +318,13 @@ class MetaScheduler:
             summary["launched"].append(job["idJob"])
 
     # -------------------------------------------------------------- queues
-    def _view(self, job, cache: PassCache) -> JobView:
+    def _view(self, job, cache: PassCache, *,
+              select_best: bool = False) -> JobView:
         """Jobs-table row -> JobView: compile the typed request when present
         (moldable alternatives); rows predating the request column schedule
-        through the legacy flat path. Raises BadRequest/BadProperties."""
+        through the legacy flat path. ``select_best`` is the owning queue's
+        moldable-selection knob (min-start alternative instead of declared
+        order). Raises BadRequest/BadProperties."""
         request_json = job["resourceRequest"]
         alternatives = cache.compiled(request_json) if request_json else None
         if alternatives is not None:
@@ -326,15 +336,17 @@ class MetaScheduler:
             idJob=job["idJob"], nbNodes=job["nbNodes"], weight=job["weight"],
             maxTime=job["maxTime"], submissionTime=job["submissionTime"],
             candidates=cands, prefer=prefer_bits,
-            bestEffort=bool(job["bestEffort"]), alternatives=alternatives)
+            bestEffort=bool(job["bestEffort"]), alternatives=alternatives,
+            deadline=job["deadline"], select_best=select_best)
 
-    def _queue_jobs(self, queue: str, cache: PassCache) -> list[JobView]:
+    def _queue_jobs(self, queue: str, cache: PassCache, *,
+                    select_best: bool = False) -> list[JobView]:
         views = []
         for job in self.db.query(
                 "SELECT * FROM jobs WHERE state='Waiting' AND reservation='None' "
                 "AND queueName=? ORDER BY idJob", (queue,)):
             try:
-                views.append(self._view(job, cache))
+                views.append(self._view(job, cache, select_best=select_best))
             except (BadProperties, BadRequest) as exc:
                 self._to_error(job["idJob"], str(exc), self.clock())
         return views
@@ -343,10 +355,11 @@ class MetaScheduler:
                          summary: dict) -> list[Placement]:
         placements: list[Placement] = []
         queues = self.db.query(
-            "SELECT queueName, policy FROM queues WHERE state='Active' "
+            "SELECT queueName, policy, moldable FROM queues WHERE state='Active' "
             "ORDER BY priority DESC, queueName")
         for q in queues:
-            jobs = self._queue_jobs(q["queueName"], cache)
+            jobs = self._queue_jobs(q["queueName"], cache,
+                                    select_best=q["moldable"] == "min_start")
             if not jobs:
                 continue
             policy = get_policy(q["policy"])
@@ -374,17 +387,22 @@ class MetaScheduler:
         on the flags; the waiting job is scheduled "when coming back to the
         scheduler" (i.e. on a later pass, once resources are actually free).
 
-        Typed-request jobs: submission mirrors the first alternative into
-        the legacy columns (nbNodes = its host floor, properties = its
-        combined filter, weight = its chip floor), so the deficit arithmetic
-        below reads the same numbers the compiled path schedules with. The
-        host count is an approximation for hierarchical shapes, so before
-        flagging victims for such a job we check *structural* satisfiability:
-        even reclaiming every running best-effort resource must be able to
-        satisfy some alternative's block constraint — otherwise killing buys
-        nothing and the job would drive an endless preempt/resubmit cycle
-        (e.g. ``/switch=1/host=12`` on 8-host switches passes the cluster-
-        wide admission cap but can never place).
+        Typed-request jobs preempt *exactly*: instead of the old host-count
+        deficit (the first alternative's floor — blind to block constraints),
+        the compiled selector is evaluated against the would-be-freed mask
+        after each victim is (tentatively) added, so victims are flagged iff
+        reclaiming them actually makes some alternative placeable — a
+        hierarchical job whose free-host *count* suffices but whose block
+        constraint is violated (e.g. two free hosts on two different
+        switches for ``/switch=1/host=2``) now frees the right block instead
+        of waiting forever, and a structurally unsatisfiable request
+        (``/switch=1/host=12`` on 8-host switches) flags nobody because even
+        the all-victims mask never satisfies a selector — no endless
+        preempt/resubmit cycle. For flat requests the selector check
+        degenerates to the same popcount arithmetic as the legacy deficit
+        loop (same victim order, minus any victim a backward prune proves
+        unnecessary); rows predating the request column keep the
+        count-based path.
         """
         started = {p.idJob for p in placements if p.starts_now(now)}
         blocked = [j for j in self.db.query(
@@ -408,32 +426,27 @@ class MetaScheduler:
         free_now = self._free_now_mask(cache.index)
         flagged: list[tuple[str, int]] = []
         for j in blocked:
-            need = j["nbNodes"]
-            try:
-                cands, _ = cache.candidates(j["properties"], j["weight"])
-            except BadProperties:
-                continue
-            deficit = need - (free_now & cands).bit_count()
-            if deficit <= 0:
-                continue  # will launch on the next pass anyway
-            if j["resourceRequest"] and not self._preemption_can_satisfy(
-                    j["resourceRequest"], cache, free_now, victims, victim_masks):
-                continue  # structurally unsatisfiable: don't kill for nothing
-            reclaimable = 0
-            chosen = []
-            for v in victims:
-                if reclaimable >= deficit:
-                    break
-                gain = (victim_masks.get(v["idJob"], 0) & cands).bit_count()
-                if gain > 0:
-                    chosen.append(v["idJob"])
-                    reclaimable += gain
-            if reclaimable >= deficit:
+            if j["resourceRequest"]:
+                try:
+                    alternatives = cache.compiled(j["resourceRequest"])
+                except (BadRequest, BadProperties):
+                    continue
+                chosen = self._victims_for_request(alternatives, free_now,
+                                                  victims, victim_masks)
+            else:  # legacy row: host-count deficit over the flat columns
+                try:
+                    cands, _ = cache.candidates(j["properties"], j["weight"])
+                except BadProperties:
+                    continue
+                chosen = self._victims_for_count(j["nbNodes"], cands, free_now,
+                                                 victims, victim_masks)
+            if chosen:
                 flagged.extend(
                     (f"preempted: resources required by job {j['idJob']}", vid)
                     for vid in chosen)
                 summary["preempted"].extend(chosen)
-                victims = [v for v in victims if v["idJob"] not in chosen]
+                taken = set(chosen)
+                victims = [v for v in victims if v["idJob"] not in taken]
         if flagged:
             with self.db.transaction() as cur:
                 cur.executemany(
@@ -442,28 +455,73 @@ class MetaScheduler:
 
     # -------------------------------------------------------------- helpers
     @staticmethod
-    def _preemption_can_satisfy(request_json: str, cache: PassCache,
-                                free_now: int, victims, victim_masks) -> bool:
-        """Upper-bound satisfiability check for a typed request: could ANY
-        alternative place if every remaining best-effort victim were
-        reclaimed on top of what is free now? (Instantaneous masks only —
-        an optimistic bound, which is all preemption needs: a False here is
-        a proof that flagging victims cannot help.)"""
-        try:
-            alternatives = cache.compiled(request_json)
-        except (BadRequest, BadProperties):
-            return False
-        potential = free_now
-        for v in victims:
-            potential |= victim_masks.get(v["idJob"], 0)
+    def _request_satisfiable(alternatives, avail: int) -> bool:
+        """Can ANY compiled alternative place instantaneously on ``avail``?
+        The selector enforces the block constraints; flat alternatives are a
+        popcount. (Instantaneous masks only — walltime windows are the
+        scheduler's job, preemption only needs "would the resources do".)"""
         for alt in alternatives:
-            avail = potential & alt.candidates
+            masked = avail & alt.candidates
             if alt.selector is None:
-                if avail.bit_count() >= alt.count:
+                if masked.bit_count() >= alt.count:
                     return True
-            elif alt.selector(avail):
+            elif alt.selector(masked):
                 return True
         return False
+
+    @classmethod
+    def _victims_for_request(cls, alternatives, free_now: int, victims,
+                             victim_masks) -> list[int] | None:
+        """Minimal victim prefix (in policy order) whose reclaimed resources
+        make some alternative placeable on top of ``free_now``. Empty list:
+        already placeable, nothing to kill (the job launches on a later pass
+        once the planner reaches it). None: not placeable even with every
+        victim reclaimed — flagging would kill for nothing."""
+        if cls._request_satisfiable(alternatives, free_now):
+            return []
+        union_cands = 0
+        for alt in alternatives:
+            union_cands |= alt.candidates
+        reclaimed = free_now
+        chosen: list[int] = []
+        for v in victims:
+            mask = victim_masks.get(v["idJob"], 0)
+            if not (mask & union_cands & ~reclaimed):
+                continue  # this victim holds nothing any alternative wants
+            reclaimed |= mask
+            chosen.append(v["idJob"])
+            if cls._request_satisfiable(alternatives, reclaimed):
+                # backward prune: an early victim taken on the wrong block
+                # may have been superseded by a later one that completed a
+                # block — don't kill jobs whose reclamation turned out
+                # unnecessary (victim masks are disjoint, so removal is a
+                # plain mask subtraction)
+                for vid in chosen[:-1]:
+                    without = reclaimed & ~victim_masks.get(vid, 0)
+                    if cls._request_satisfiable(alternatives, without):
+                        reclaimed = without
+                        chosen.remove(vid)
+                return chosen
+        return None
+
+    @staticmethod
+    def _victims_for_count(need: int, cands: int, free_now: int, victims,
+                           victim_masks) -> list[int] | None:
+        """Legacy host-count deficit loop for rows predating the typed
+        request column (same contract as :meth:`_victims_for_request`)."""
+        deficit = need - (free_now & cands).bit_count()
+        if deficit <= 0:
+            return []
+        reclaimable = 0
+        chosen: list[int] = []
+        for v in victims:
+            if reclaimable >= deficit:
+                break
+            gain = (victim_masks.get(v["idJob"], 0) & cands).bit_count()
+            if gain > 0:
+                chosen.append(v["idJob"])
+                reclaimable += gain
+        return chosen if reclaimable >= deficit else None
 
     def _free_now_mask(self, index: ResourceIndex) -> int:
         busy = {r["idResource"] for r in self.db.query(

@@ -23,6 +23,14 @@ ESP2 benchmark can reproduce figs. 4-8:
 - ``easy_backfill``       Maui-like EASY/aggressive backfilling: only the
                           queue head holds a reservation; later jobs backfill
                           if they do not delay the head.
+- ``edf``                 Libra-style deadline tier (Sheth et al., cs/0207077):
+                          earliest effective deadline first with slack-aware
+                          tie-breaking, then conservative placement — every
+                          job still gets a definite slot, so the no-famine
+                          guarantee survives the reordering. Deadline-less
+                          jobs age toward an effective deadline of
+                          ``submissionTime + EDF_AGING_WINDOW`` so a stream
+                          of tight-deadline arrivals cannot starve them.
 
 Every policy is a pure function ``(gantt, jobs, now) -> [Placement]`` over
 the in-memory Gantt; persistence stays in the meta-scheduler, so policies
@@ -46,7 +54,13 @@ from dataclasses import dataclass, field
 from repro.core.gantt import EPS, Gantt, ResourceIndex
 
 __all__ = ["JobView", "Placement", "POLICIES", "register_policy",
-           "get_policy", "find_fit"]
+           "get_policy", "find_fit", "fragmentation", "EDF_AGING_WINDOW"]
+
+# Starvation protection for the EDF tier: a job submitted without a deadline
+# competes as if it were due this long after submission, so it cannot be
+# outranked forever by a stream of later tight-deadline arrivals (and a job
+# with a deadline further out than this ranks behind long-waiting ones).
+EDF_AGING_WINDOW = 86_400.0
 
 
 @dataclass
@@ -63,6 +77,13 @@ class JobView:
     submitted through the request language; the first *satisfiable*
     alternative wins (moldable semantics). ``None`` means the legacy flat
     path: place ``nbNodes`` hosts from ``candidates``.
+
+    ``deadline`` is the Libra-style completion target from the submission
+    contract (``jobs.deadline``, validated by admission rule 12); ``None``
+    means no deadline. ``select_best`` is the per-queue moldable-selection
+    knob: ``False`` keeps the declared-order first-satisfiable contract,
+    ``True`` scores every satisfiable alternative and places the one that
+    starts earliest (fragmentation as tie-break).
     """
     idJob: int
     nbNodes: int
@@ -73,6 +94,25 @@ class JobView:
     prefer: list[int] | None = None
     bestEffort: bool = False
     alternatives: list | None = None
+    deadline: float | None = None
+    select_best: bool = False
+
+    def effective_deadline(self) -> float:
+        """The deadline the EDF tier orders by: the declared one, or the
+        aging target for deadline-less jobs (starvation protection)."""
+        if self.deadline is not None:
+            return self.deadline
+        return self.submissionTime + EDF_AGING_WINDOW
+
+    def min_walltime(self) -> float:
+        """Best-case planned duration: the shortest per-alternative walltime
+        override, or the job's maxTime. The EDF slack/demotion arithmetic
+        must use this — a moldable job whose short alternative can still
+        meet the deadline is winnable even when maxTime says otherwise."""
+        if self.alternatives:
+            return min(alt.walltime if alt.walltime is not None else
+                       self.maxTime for alt in self.alternatives)
+        return self.maxTime
 
     @property
     def procs(self) -> int:
@@ -124,21 +164,36 @@ class Placement:
         return f"Placement(idJob={self.idJob}, start={self.start}, resources={self.resources})"
 
 
+def fragmentation(mask: int) -> int:
+    """Number of contiguous bit runs in a chosen-resources mask. Bit
+    positions follow ascending resource id, which `match_resources` hands
+    out in (pod, switch, id) locality order — so fewer runs means a more
+    contiguous placement on the interconnect (less fragmentation)."""
+    return (mask & ~(mask >> 1)).bit_count()
+
+
 def find_fit(gantt: Gantt, job: JobView, after: float | None, *,
              exact_start: float | None = None, use_prefer: bool = True
              ) -> tuple[float, int, float, float | None] | None:
     """Earliest fit for a job, honouring moldable alternatives.
 
-    Alternatives are tried in declared order and the first *satisfiable* one
-    wins — even if a later alternative could start earlier (the contract the
-    request language documents). Returns ``(start, chosen_mask, walltime,
-    override)`` where ``walltime`` is the duration actually planned and
-    ``override`` is non-None only when it differs from the job's stored
-    maxTime. ``use_prefer=False`` reproduces the legacy reservation path,
-    which picks by ascending resource id.
+    By default alternatives are tried in declared order and the first
+    *satisfiable* one wins — even if a later alternative could start earlier
+    (the contract the request language documents). With ``job.select_best``
+    (the per-queue moldable-selection knob) every alternative is scored via
+    the same Gantt sweep and the minimum-start one is placed, tie-broken by
+    :func:`fragmentation` of the chosen mask, then declared order.
+
+    Returns ``(start, chosen_mask, walltime, override)`` where ``walltime``
+    is the duration actually planned and ``override`` is non-None only when
+    it differs from the job's stored maxTime. ``use_prefer=False``
+    reproduces the legacy reservation path, which picks by ascending
+    resource id.
     """
     if job.alternatives:
-        for alt in job.alternatives:
+        select_best = job.select_best and len(job.alternatives) > 1
+        best: tuple[tuple[float, int, int], tuple] | None = None
+        for k, alt in enumerate(job.alternatives):
             wt = alt.walltime if alt.walltime is not None else job.maxTime
             if alt.selector is None:
                 fit = gantt.find_slot_mask(
@@ -149,10 +204,15 @@ def find_fit(gantt: Gantt, job: JobView, after: float | None, *,
                 fit = gantt.find_slot_select(alt.candidates, wt, alt.selector,
                                              after=after,
                                              exact_start=exact_start)
-            if fit is not None:
-                override = wt if wt != job.maxTime else None
+            if fit is None:
+                continue
+            override = wt if wt != job.maxTime else None
+            if not select_best:
                 return fit[0], fit[1], wt, override
-        return None
+            key = (fit[0], fragmentation(fit[1]), k)
+            if best is None or key < best[0]:
+                best = (key, (fit[0], fit[1], wt, override))
+        return best[1] if best is not None else None
     cand, prefer_bits = job.mask_and_prefer(gantt.index)
     fit = gantt.find_slot_mask(cand, job.nbNodes, job.maxTime, after=after,
                                exact_start=exact_start,
@@ -217,9 +277,40 @@ def fifo_backfill(gantt: Gantt, jobs: list[JobView], now: float) -> list[Placeme
 @register_policy("sjf_resources")
 def sjf_resources(gantt: Gantt, jobs: list[JobView], now: float) -> list[Placement]:
     # §3.2.1: "we changed the scheduling policy within a queue in OAR from
-    # FIFO order to increasing number of required ressources order"
-    ordered = sorted(jobs, key=lambda j: (j.procs, j.idJob))
+    # FIFO order to increasing number of required ressources order". The
+    # deadline term breaks resource-demand ties toward the more urgent job;
+    # with no deadlines in the queue it degenerates to (procs, idJob) and the
+    # order (hence the schedule) is byte-identical to the pre-deadline code.
+    ordered = sorted(jobs, key=lambda j: (
+        j.procs, j.deadline if j.deadline is not None else math.inf, j.idJob))
     return _place_conservative(gantt, ordered, now)
+
+
+@register_policy("edf")
+def edf(gantt: Gantt, jobs: list[JobView], now: float) -> list[Placement]:
+    """Earliest (effective) deadline first, conservative placement.
+
+    Order: ascending effective deadline — the declared ``jobs.deadline``, or
+    ``submissionTime + EDF_AGING_WINDOW`` for deadline-less jobs (aging, so
+    they cannot starve behind a stream of tight deadlines). Equal deadlines
+    tie-break by ascending slack (``deadline - now - min_walltime``, the
+    best case across moldable alternatives): of two jobs due at the same
+    instant, the one with less room to spare goes first.
+
+    Overload protection: a job whose deadline can no longer be met even by
+    starting its shortest alternative right now is *demoted* behind
+    every still-winnable job — plain EDF would keep it at the queue head
+    (its deadline is the earliest of all) and let one hopeless job domino
+    the whole backlog into misses. Demoted jobs keep their relative EDF
+    order, and conservative placement still hands every job a definite
+    slot, so the paper's no-famine guarantee survives both reorderings.
+    """
+    def urgency(j: JobView) -> tuple[int, float, float, int]:
+        eff = j.effective_deadline()
+        slack = eff - now - j.min_walltime()   # best case across alternatives
+        hopeless = j.deadline is not None and slack < -EPS
+        return (1 if hopeless else 0, eff, slack, j.idJob)
+    return _place_conservative(gantt, sorted(jobs, key=urgency), now)
 
 
 @register_policy("greedy_small_first")

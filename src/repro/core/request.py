@@ -14,7 +14,8 @@ Grammar (one request string)::
     request      :=  alternative ( '|' alternative )*
     alternative  :=  term+ option*
     term         :=  '/' level '=' count [ '{' filter '}' ]
-    option       :=  ',' key '=' number          # key: 'weight' | 'walltime'
+    option       :=  ',' key '=' number    # key: 'weight' | 'walltime'
+                                           #    | 'deadline'
     level        :=  'pod' | 'switch' | 'host'
     count        :=  positive integer | 'ALL'    # ALL: host level only
 
@@ -34,6 +35,9 @@ Examples::
     /host=8{mem_gb >= 32}, walltime=3600      property filter + walltime
     /switch=1/host=8 | /pod=1/host=8          moldable: single-switch if
                                               satisfiable, else single-pod
+    /host=4, deadline=7200                    Libra-style completion target
+                                              (absolute time; admission rule
+                                              12 rejects unreachable ones)
 
 The parsed form is an ordered list of :class:`ResourceRequest` (one per
 alternative), serialised to a canonical JSON document stored in the
@@ -85,11 +89,14 @@ class ResourceRequest:
 
     ``weight`` is the per-host chip floor (the legacy ``weight`` column);
     ``walltime`` overrides the job's ``maxTime`` when this alternative is the
-    one placed (``None`` = inherit the job's walltime).
+    one placed (``None`` = inherit the job's walltime). ``deadline`` is the
+    Libra-style completion target (absolute time); the submission path lifts
+    the tightest one across alternatives into ``jobs.deadline``.
     """
     levels: tuple[LevelRequest, ...] = field(default_factory=tuple)
     weight: int = 1
     walltime: float | None = None
+    deadline: float | None = None
 
     # ------------------------------------------------------------- derived
     @property
@@ -164,7 +171,16 @@ class ResourceRequest:
                 raise BadRequest(f"walltime must be a number, got {walltime!r}")
             if walltime <= 0:
                 raise BadRequest(f"walltime must be > 0, got {walltime}")
-        req = cls(levels=tuple(levels), weight=weight, walltime=walltime)
+        deadline = d.get("deadline")
+        if deadline is not None:
+            try:
+                deadline = float(deadline)
+            except (TypeError, ValueError):
+                raise BadRequest(f"deadline must be a number, got {deadline!r}")
+            if deadline <= 0:
+                raise BadRequest(f"deadline must be > 0, got {deadline}")
+        req = cls(levels=tuple(levels), weight=weight, walltime=walltime,
+                  deadline=deadline)
         _check_levels(req.levels)
         return req
 
@@ -173,6 +189,8 @@ class ResourceRequest:
                    "weight": self.weight}
         if self.walltime is not None:
             d["walltime"] = self.walltime
+        if self.deadline is not None:
+            d["deadline"] = self.deadline
         return d
 
     # ------------------------------------------------------------ rendering
@@ -187,6 +205,11 @@ class ResourceRequest:
             s += f", weight={self.weight}"
         if self.walltime is not None:
             s += f", walltime={self.walltime:g}"
+        if self.deadline is not None:
+            # repr, not %g: deadlines are absolute times (~1.7e9 for epoch
+            # clocks) and %g's 6 significant digits would shift them by
+            # minutes — repr is the shortest exact round-trip
+            s += f", deadline={self.deadline!r}"
         return s
 
 
@@ -245,7 +268,7 @@ def _parse_alternative(text: str) -> ResourceRequest:
         levels.append(LevelRequest(m.group("level"), count,
                                    validate_properties(m.group("filter") or "")))
         pos = m.end()
-    weight, walltime = 1, None
+    weight, walltime, deadline = 1, None, None
     for opt in chunks[1:]:
         m = _OPTION_RE.match(opt)
         if m is None:
@@ -255,20 +278,25 @@ def _parse_alternative(text: str) -> ResourceRequest:
             if not value.isdigit() or int(value) < 1:
                 raise BadRequest(f"weight must be a positive int, got {value!r}")
             weight = int(value)
-        elif key == "walltime":
+        elif key in ("walltime", "deadline"):
             try:
-                walltime = float(value)
+                parsed = float(value)
             except ValueError:
-                raise BadRequest(f"walltime must be a number, got {value!r}")
-            if walltime <= 0:
-                raise BadRequest(f"walltime must be > 0, got {value!r}")
+                raise BadRequest(f"{key} must be a number, got {value!r}")
+            if parsed <= 0:
+                raise BadRequest(f"{key} must be > 0, got {value!r}")
+            if key == "walltime":
+                walltime = parsed
+            else:
+                deadline = parsed
         else:
             raise BadRequest(f"unknown request option {key!r} "
-                             f"(have: weight, walltime)")
+                             f"(have: weight, walltime, deadline)")
     # normalise: a request stopping above 'host' means whole blocks
     if levels and levels[-1].level != HIERARCHY[-1]:
         levels.append(LevelRequest(HIERARCHY[-1], None, ""))
-    req = ResourceRequest(levels=tuple(levels), weight=weight, walltime=walltime)
+    req = ResourceRequest(levels=tuple(levels), weight=weight,
+                          walltime=walltime, deadline=deadline)
     _check_levels(req.levels)
     return req
 

@@ -72,8 +72,11 @@ CREATE TABLE IF NOT EXISTS queues (
     queueName  TEXT PRIMARY KEY,
     priority   INTEGER NOT NULL DEFAULT 0,     -- higher scheduled first
     policy     TEXT NOT NULL DEFAULT 'fifo_backfill',
-    state      TEXT NOT NULL DEFAULT 'Active'  -- Active | Stopped  (§2.3: a whole
-)                                              -- queue can be interrupted)
+    state      TEXT NOT NULL DEFAULT 'Active', -- Active | Stopped  (§2.3: a whole
+                                               -- queue can be interrupted)
+    moldable   TEXT NOT NULL DEFAULT 'first'   -- alternative selection:
+)                                              -- 'first' (declared order) |
+                                               -- 'min_start' (earliest start)
 """
 
 ADMISSION_RULES = """
@@ -133,13 +136,31 @@ JOBS_MIGRATIONS = [
     ("deadline", "ALTER TABLE jobs ADD COLUMN deadline REAL"),
 ]
 
+QUEUES_MIGRATIONS = [
+    ("moldable", "ALTER TABLE queues ADD COLUMN moldable TEXT "
+                 "NOT NULL DEFAULT 'first'"),
+]
+
 
 def apply_migrations(db) -> None:
-    """Bring a reopened store up to this code version: add any jobs columns
-    it predates, and install the default admission rules that validate the
-    new columns (matched by exact rule text, so an administrator's edited
-    or deleted copies are never duplicated or resurrected — only rules the
-    store has never seen are added). No-op on up-to-date stores."""
+    """Bring a reopened store up to this code version: add any jobs/queues
+    columns it predates, and install the default admission rules that
+    validate the new columns (matched by exact rule text, so an
+    administrator's edited or deleted copies are never duplicated or
+    resurrected — only rules the store has never seen are added). No-op on
+    up-to-date stores."""
+    have_q = {r["name"] for r in db.query("PRAGMA table_info(queues)")}
+    missing_q = [ddl for col, ddl in QUEUES_MIGRATIONS if col not in have_q]
+    if missing_q:
+        with db.transaction() as cur:
+            for ddl in missing_q:
+                cur.execute(ddl)
+    # upgrade default rules whose text was superseded (exact match only, so
+    # administrator-edited rules are never touched)
+    with db.transaction() as cur:
+        for old, new in SUPERSEDED_RULES:
+            cur.execute("UPDATE admission_rules SET rule=? WHERE rule=?",
+                        (new, old))
     have = {r["name"] for r in db.query("PRAGMA table_info(jobs)")}
     missing = [ddl for col, ddl in JOBS_MIGRATIONS if col not in have]
     if missing:
@@ -184,18 +205,44 @@ DEFAULT_ADMISSION_RULES = [
         "            raise AdmissionError('request asks for %d %ss, cluster has %d'\n"
         "                % (lvl['count'], lvl['level'], cap))"
     )),
-    # a deadline (Libra-style submission contract) must be reachable at all
+    # a deadline (Libra-style submission contract) must be reachable at all —
+    # by the BEST case: the shortest per-alternative walltime override, or
+    # the job's maxTime (the same arithmetic the edf policy's demotion
+    # uses). Plain loops only: a comprehension inside exec() cannot see the
+    # rule namespace, so it would NameError and void the rule.
     (12, (
-        "if job.get('deadline') is not None and \\\n"
-        "        job['deadline'] < job.get('submissionTime', 0) + job['maxTime']:\n"
-        "    raise AdmissionError('deadline %.1f unreachable: job needs %.1fs'\n"
-        "        % (job['deadline'], job['maxTime']))"
+        "if job.get('deadline') is not None:\n"
+        "    _need = job['maxTime']\n"
+        "    for _alt in (job.get('request') or []):\n"
+        "        _wt = _alt.get('walltime') or job['maxTime']\n"
+        "        if _wt < _need:\n"
+        "            _need = _wt\n"
+        "    if job['deadline'] < job.get('submissionTime', 0) + _need:\n"
+        "        raise AdmissionError('deadline %.1f unreachable: job needs %.1fs'\n"
+        "            % (job['deadline'], _need))"
     )),
     # §3.3: submitting to the besteffort queue tags the job preemptible —
     # "this property is set by the module that validates incoming jobs"
     (20, "if job['queueName'] == 'besteffort':\n    job['bestEffort'] = 1"),
     # reservations enter negotiation (fig. 1 'toAckReservation' path)
     (30, "if job.get('reservationStart') is not None:\n    job['reservation'] = 'toSchedule'"),
+]
+
+# Superseded default-rule texts: when a default admission rule's text
+# changes, reopened stores still hold the old text (rules live in the DB,
+# §2.1). apply_migrations upgrades rows matching a previous default EXACTLY
+# — an administrator's edited copy never matches, so it is preserved, the
+# same contract the rule-install path keeps. Entry: (old_text, new_text).
+SUPERSEDED_RULES = [
+    (
+        # pre-moldable rule 12: judged reachability by maxTime only, which
+        # rejects deadlines reachable via a shorter alternative walltime
+        "if job.get('deadline') is not None and \\\n"
+        "        job['deadline'] < job.get('submissionTime', 0) + job['maxTime']:\n"
+        "    raise AdmissionError('deadline %.1f unreachable: job needs %.1fs'\n"
+        "        % (job['deadline'], job['maxTime']))",
+        next(rule for prio, rule in DEFAULT_ADMISSION_RULES if prio == 12),
+    ),
 ]
 
 DEFAULT_QUEUES = [

@@ -69,6 +69,7 @@ class JobRecord:
     state: str = ""
     resources: frozenset = frozenset()   # captured while Running (assignments
                                          # are cleared on termination)
+    deadline: float | None = None        # Libra-style completion target
 
     @property
     def response(self) -> float | None:
@@ -77,6 +78,20 @@ class JobRecord:
     @property
     def wait(self) -> float | None:
         return None if self.start is None else self.start - self.submit
+
+    @property
+    def slack(self) -> float | None:
+        """Time to spare at completion (negative = deadline missed)."""
+        if self.deadline is None or self.stop is None:
+            return None
+        return self.deadline - self.stop
+
+    def met_deadline(self) -> bool:
+        """Terminated at or before the deadline (a job still waiting or
+        killed past its deadline counts as a miss)."""
+        return (self.deadline is not None and self.stop is not None
+                and self.state == jobstate.TERMINATED
+                and self.stop <= self.deadline + EPS)
 
 
 class ClusterSimulator:
@@ -90,7 +105,8 @@ class ClusterSimulator:
 
     def __init__(self, *, n_nodes: int = 17, weight: int = 2, pods: int = 1,
                  switches_per_pod: int = 1,
-                 policy: str = "fifo_backfill", db_path: str = ":memory:",
+                 policy: str = "fifo_backfill", moldable: str = "first",
+                 db_path: str = ":memory:",
                  check_nodes: bool = False, transport: SimTransport | None = None,
                  victim_policy: str = "youngest_first",
                  scheduler_period: float = 30.0,
@@ -100,6 +116,11 @@ class ClusterSimulator:
         self._heap: list[_Event] = []
         self.db = connect(db_path, fresh=(db_path != ":memory:"))
         self.db.clock = lambda: self.now   # event_log in virtual time
+        from repro.core.policies import get_policy
+        get_policy(policy)   # same up-front validation as api.set_queue:
+        if moldable not in ("first", "min_start"):   # a typo'd knob must not
+            raise ValueError(f"moldable must be 'first' or 'min_start', "
+                             f"got {moldable!r}")    # silently run as 'first'
         per_pod = n_nodes // pods if pods > 1 else n_nodes
         for p in range(pods):
             count = per_pod if p < pods - 1 else n_nodes - per_pod * (pods - 1)
@@ -120,7 +141,8 @@ class ClusterSimulator:
                         self.db, [f"pod{p}-host{i}" for i in range(lo, hi)],
                         weight=weight, pod=p, switch=f"sw{p}.{s}")
         with self.db.transaction() as cur:
-            cur.execute("UPDATE queues SET policy=?", (policy,))
+            cur.execute("UPDATE queues SET policy=?, moldable=?",
+                        (policy, moldable))
         clock = lambda: self.now  # noqa: E731
         self.transport = transport or SimTransport()
         scheduler = MetaScheduler(self.db, clock=clock,
@@ -158,7 +180,8 @@ class ClusterSimulator:
                queue: str | None = None, user: str = "sim",
                properties: str = "", reservation_start: float | None = None,
                best_effort: bool | None = None, tag: str = "",
-               request: str | None = None) -> None:
+               request: str | None = None,
+               deadline: float | None = None) -> None:
         """Queue a submission event at virtual time ``at``.
 
         ``duration`` is the job's *actual* run time (virtual); ``max_time``
@@ -168,6 +191,9 @@ class ClusterSimulator:
         a resource-request language string (hierarchical / moldable — see
         the README grammar and ``repro.core.request``); when given it
         replaces the flat ``nb_nodes``/``weight``/``properties`` triple.
+        ``deadline`` is the Libra-style completion target in absolute
+        virtual time (admission rule 12 rejects unreachable ones; the
+        ``edf`` policy orders by it; :meth:`deadline_metrics` scores it).
         ``reservation_start`` asks for an exact slot (the fig. 1
         ``toAckReservation`` negotiation); ``queue`` routes to a queue
         ("interactive", "default", "besteffort" by default).
@@ -177,7 +203,7 @@ class ClusterSimulator:
             "max_time": max_time if max_time is not None else duration * 1.25 + 1.0,
             "queue": queue, "user": user, "properties": properties,
             "reservation_start": reservation_start, "best_effort": best_effort,
-            "tag": tag, "request": request})
+            "tag": tag, "request": request, "deadline": deadline})
 
     def fail_node(self, at: float, hostname: str) -> None:
         """Make ``hostname`` unreachable from time ``at``: the next
@@ -278,23 +304,42 @@ class ClusterSimulator:
 
     # ----------------------------------------------------------- event kinds
     def _on_submit(self, p: dict) -> None:
-        jid = api.oarsub(
-            self.db, json.dumps({"kind": "sim", "duration": p["duration"],
-                                 "tag": p["tag"]}),
-            user=p["user"], queue=p["queue"], nb_nodes=p["nb_nodes"],
-            weight=p["weight"], max_time=p["max_time"],
-            properties=p["properties"], request=p.get("request"),
-            reservation_start=p["reservation_start"],
-            best_effort=p["best_effort"], clock=lambda: self.now)
+        try:
+            jid = api.oarsub(
+                self.db, json.dumps({"kind": "sim", "duration": p["duration"],
+                                     "tag": p["tag"]}),
+                user=p["user"], queue=p["queue"], nb_nodes=p["nb_nodes"],
+                weight=p["weight"], max_time=p["max_time"],
+                properties=p["properties"], request=p.get("request"),
+                reservation_start=p["reservation_start"],
+                best_effort=p["best_effort"], deadline=p.get("deadline"),
+                clock=lambda: self.now)
+        except api.AdmissionError as exc:
+            # a rejected submission (e.g. rule 12: unreachable deadline) is a
+            # user error, not a simulator crash — the job simply never enters
+            # the system, exactly like the real oarsub returning non-zero
+            self.db.log_event("simulator", "warning",
+                              f"submission rejected: {exc}")
+            return
         if p.get("request"):
-            # procs from the stored first alternative (the legacy mirror)
+            # procs (and any request-grammar deadline) from the stored row —
+            # the legacy mirror of the first alternative
             row = self.db.query_one(
-                "SELECT nbNodes, weight FROM jobs WHERE idJob=?", (jid,))
+                "SELECT nbNodes, weight, deadline FROM jobs WHERE idJob=?",
+                (jid,))
             procs = row["nbNodes"] * row["weight"]
+            deadline = row["deadline"]
         else:
             procs = p["nb_nodes"] * p["weight"]
+            # the stored row is the source of truth (an admission rule may
+            # have rewritten the deadline); only deadline-bearing submits
+            # pay the read — the 100k-job trace stays query-free here
+            deadline = self.db.scalar(
+                "SELECT deadline FROM jobs WHERE idJob=?", (jid,)) \
+                if p.get("deadline") is not None else None
         self.records[jid] = JobRecord(jid, self.now, p["duration"], procs,
-                                      state=jobstate.WAITING)
+                                      state=jobstate.WAITING,
+                                      deadline=deadline)
 
     def _on_complete(self, payload: tuple[int, bool, str]) -> None:
         jid, ok, msg = payload
@@ -375,6 +420,37 @@ class ClusterSimulator:
         self._next_wakeup = t
 
     # ------------------------------------------------------------- analysis
+    def deadline_metrics(self) -> dict:
+        """Deadline scorecard over every deadline-bearing job seen so far.
+
+        A job's outcome is *decided* once it terminated, failed for good, or
+        its deadline passed; a hit is a job that terminated by its deadline.
+        ``hit_rate`` is hits over decided jobs — a job still in flight with
+        its deadline ahead is ``pending``, not a miss, so sampling the
+        scorecard mid-run does not underreport (after a full run every job
+        is decided). ``mean_slack_s``/``min_slack_s`` aggregate
+        time-to-spare over completed jobs (negative slack = a miss and by
+        how much)."""
+        recs = [r for r in self.records.values() if r.deadline is not None]
+        decided = [r for r in recs
+                   if r.state in (jobstate.TERMINATED, jobstate.ERROR)
+                   or self.now > r.deadline + EPS]
+        hits = [r for r in decided if r.met_deadline()]
+        slacks = [r.slack for r in recs if r.slack is not None
+                  and r.state == jobstate.TERMINATED]   # completed jobs only:
+        # a preempted job's stop is its kill time, which would read as
+        # healthy positive slack for a job that never delivered
+        return {
+            "jobs": len(recs),
+            "completed": sum(1 for r in recs if r.state == jobstate.TERMINATED),
+            "decided": len(decided),
+            "pending": len(recs) - len(decided),
+            "hits": len(hits),
+            "hit_rate": len(hits) / len(decided) if decided else 1.0,
+            "mean_slack_s": sum(slacks) / len(slacks) if slacks else 0.0,
+            "min_slack_s": min(slacks) if slacks else 0.0,
+        }
+
     def utilisation(self, horizon: float | None = None) -> float:
         """Integral of procs-in-use over time / (total_procs × makespan)."""
         total = self.db.scalar("SELECT SUM(weight) FROM resources") or 1

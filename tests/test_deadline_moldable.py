@@ -1,0 +1,396 @@
+"""Deadline tier + moldable selection: property and differential tests.
+
+The EDF invariants the policy must keep (conservative placement order,
+admitted deadlines honoured on an idle cluster, no starvation) and a
+brute-force reference check that min-start moldable selection really picks
+the earliest-starting alternative — computed with plain set arithmetic,
+independently of the Gantt sweep it verifies.
+"""
+
+import random
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gantt import EPS, Gantt
+from repro.core.matching import CompiledAlternative
+from repro.core.policies import (EDF_AGING_WINDOW, JobView, find_fit,
+                                 fragmentation, get_policy)
+
+RES = frozenset(range(1, 9))
+
+
+def _edf_key(j: JobView, now: float):
+    """The documented EDF order (mirrors policies.edf for test oracles)."""
+    eff = j.effective_deadline()
+    slack = eff - now - j.min_walltime()
+    hopeless = j.deadline is not None and slack < -EPS
+    return (1 if hopeless else 0, eff, slack, j.idJob)
+
+
+# ------------------------------------------------------------ EDF invariants
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.floats(10, 5000), min_size=1, max_size=12))
+def test_edf_identical_shapes_start_in_deadline_order(deadlines):
+    """Property: with identical job shapes (so backfilling cannot help a
+    later job start earlier), EDF starts are monotone in deadline order —
+    no job with a later deadline starts before a feasible earlier-deadline
+    job at equal priority."""
+    jobs = [JobView(idJob=i + 1, nbNodes=2, weight=1, maxTime=50.0,
+                    submissionTime=0.0, candidates=set(RES),
+                    deadline=100.0 + d)
+            for i, d in enumerate(deadlines)]
+    placements = {p.idJob: p
+                  for p in get_policy("edf")(Gantt(set(RES), 0.0), jobs, 0.0)}
+    assert len(placements) == len(jobs)          # no starvation
+    order = sorted(jobs, key=lambda j: _edf_key(j, 0.0))
+    starts = [placements[j.idJob].start for j in order]
+    assert starts == sorted(starts)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(1, 500), st.integers(1, 8), st.floats(0, 1000),
+       st.floats(0, 3))
+def test_edf_admitted_deadline_met_on_idle_cluster(maxtime, nodes, now, extra):
+    """Property: a deadline that passed admission (rule 12: reachable from
+    submission) is never violated on an idle cluster — the job starts
+    immediately and its walltime fits before the deadline."""
+    deadline = now + maxtime * (1.0 + extra)     # admitted: reachable
+    job = JobView(idJob=1, nbNodes=nodes, weight=1, maxTime=maxtime,
+                  submissionTime=now, candidates=set(RES), deadline=deadline)
+    placements = get_policy("edf")(Gantt(set(RES), now), [job], now)
+    assert len(placements) == 1
+    p = placements[0]
+    assert p.start <= now + EPS
+    assert p.start + maxtime <= deadline + EPS
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 8), st.floats(1, 100),
+                          st.floats(0, 2000)),
+                min_size=2, max_size=9))
+def test_edf_later_jobs_never_delay_earlier(descs):
+    """Property (the conservative no-delay guarantee under EDF order):
+    scheduling only the first k jobs in EDF order yields exactly the
+    placements the full run gives them — later/looser-deadline jobs can
+    backfill but can never delay or displace a more urgent one."""
+    jobs = [JobView(idJob=i + 1, nbNodes=n, weight=1, maxTime=t,
+                    submissionTime=0.0, candidates=set(RES),
+                    deadline=500.0 + d)
+            for i, (n, t, d) in enumerate(descs)]
+    full = {p.idJob: (p.start, frozenset(p.resources))
+            for p in get_policy("edf")(Gantt(set(RES), 0.0), jobs, 0.0)}
+    ordered = sorted(jobs, key=lambda j: _edf_key(j, 0.0))
+    for k in range(1, len(ordered)):
+        part = get_policy("edf")(Gantt(set(RES), 0.0), ordered[:k], 0.0)
+        for p in part:
+            assert full[p.idJob] == (p.start, frozenset(p.resources))
+
+
+def test_edf_aging_protects_deadline_less_jobs():
+    """A deadline-less job ages as if due EDF_AGING_WINDOW after submission:
+    it outranks jobs whose declared deadlines are even further out."""
+    old = JobView(idJob=1, nbNodes=8, weight=1, maxTime=10.0,
+                  submissionTime=0.0, candidates=set(RES))        # no deadline
+    tight = JobView(idJob=2, nbNodes=8, weight=1, maxTime=10.0,
+                    submissionTime=0.0, candidates=set(RES),
+                    deadline=EDF_AGING_WINDOW / 2)
+    loose = JobView(idJob=3, nbNodes=8, weight=1, maxTime=10.0,
+                    submissionTime=0.0, candidates=set(RES),
+                    deadline=EDF_AGING_WINDOW * 2)
+    p = {pl.idJob: pl for pl in get_policy("edf")(
+        Gantt(set(RES), 0.0), [old, tight, loose], 0.0)}
+    assert p[2].start < p[1].start < p[3].start
+
+
+def test_edf_demotion_uses_best_case_alternative_walltime():
+    """A moldable job whose SHORT alternative can still meet the deadline
+    is winnable — demotion must judge by the best case, not the job-level
+    maxTime (which the long fallback alternative implies)."""
+    g = Gantt(set(RES), 0.0)
+    short = CompiledAlternative(g.index.mask_of(set(RES)), [], None,
+                                2, 1, 50.0, 2)           # walltime override
+    long_ = CompiledAlternative(g.index.mask_of(set(RES)), [], None,
+                                8, 1, None, 8)
+    moldable = JobView(idJob=1, nbNodes=2, weight=1, maxTime=100.0,
+                       submissionTime=0.0, candidates=short.candidates,
+                       alternatives=[short, long_], deadline=60.0)
+    other = JobView(idJob=2, nbNodes=8, weight=1, maxTime=100.0,
+                    submissionTime=0.0, candidates=g.index.mask_of(set(RES)),
+                    deadline=500.0)
+    assert moldable.min_walltime() == 50.0
+    p = {pl.idJob: pl for pl in get_policy("edf")(g, [moldable, other], 0.0)}
+    assert p[1].start == 0.0             # NOT demoted: 50s alt meets t=60
+    assert p[1].start + 50.0 <= 60.0 + EPS
+
+
+def test_edf_demotes_hopeless_jobs_behind_winnable_ones():
+    """Overload protection: a job whose deadline cannot be met even by
+    starting now must not hold up jobs that can still win (the EDF domino
+    pathology) — but it still gets a definite slot (no famine)."""
+    hopeless = JobView(idJob=1, nbNodes=8, weight=1, maxTime=100.0,
+                       submissionTime=0.0, candidates=set(RES),
+                       deadline=50.0)     # needs 100s, due in 50: unwinnable
+    winnable = JobView(idJob=2, nbNodes=8, weight=1, maxTime=100.0,
+                       submissionTime=0.0, candidates=set(RES),
+                       deadline=150.0)
+    p = {pl.idJob: pl for pl in get_policy("edf")(
+        Gantt(set(RES), 0.0), [hopeless, winnable], 0.0)}
+    assert p[2].start == 0.0             # the winnable one wins
+    assert p[1].start == 100.0           # hopeless still placed — no famine
+    assert p[2].start + 100.0 <= 150.0 + EPS
+
+
+# ----------------------------------------- moldable selection, brute-forced
+def _free_over(occupied, rid, a, b):
+    return all(not (rid in rids and a < stop and b > start)
+               for rids, start, stop in occupied)
+
+
+def _earliest_fit_bruteforce(occupied, cands, count, duration):
+    """Independent oracle: earliest start where `count` of `cands` are free
+    over the whole window, scanning candidate starts with set arithmetic
+    (no Gantt code involved). Chooses lowest resource ids, like the
+    prefer-less sweep."""
+    starts = sorted({0.0} | {stop for _, _, stop in occupied})
+    for t in starts:
+        avail = sorted(r for r in cands
+                       if _free_over(occupied, r, t, t + duration))
+        if len(avail) >= count:
+            return t, frozenset(avail[:count])
+    return None
+
+
+occupations = st.lists(
+    st.tuples(st.sets(st.sampled_from(sorted(RES)), min_size=1, max_size=6),
+              st.floats(0, 60), st.floats(1, 40)),
+    max_size=6)
+
+alternative_descs = st.lists(
+    st.tuples(st.sets(st.sampled_from(sorted(RES)), min_size=1, max_size=8),
+              st.integers(1, 4), st.floats(1, 50)),
+    min_size=1, max_size=4)
+
+
+@settings(max_examples=100, deadline=None)
+@given(occupations, alternative_descs)
+def test_min_start_selection_matches_bruteforce(occ, alt_descs):
+    """Differential property: with the per-queue knob on, find_fit places
+    the alternative with the true minimum start time, as computed by the
+    set-arithmetic oracle — never a later-starting one just because it was
+    declared first."""
+    g = Gantt(set(RES), 0.0)
+    occupied = []
+    for rids, start, dur in occ:
+        g.occupy(set(rids), start, start + dur)
+        occupied.append((set(rids), start, start + dur))
+    alternatives = [
+        CompiledAlternative(g.index.mask_of(cands), [], None,
+                            min(count, len(cands)), 1, wt,
+                            min(count, len(cands)))
+        for cands, count, wt in alt_descs]
+    job = JobView(idJob=1, nbNodes=alternatives[0].count, weight=1,
+                  maxTime=30.0, submissionTime=0.0,
+                  candidates=alternatives[0].candidates,
+                  alternatives=alternatives, select_best=True)
+    got = find_fit(g, job, 0.0)
+    best_start = None
+    for alt in alternatives:
+        wt = alt.walltime if alt.walltime is not None else job.maxTime
+        fit = _earliest_fit_bruteforce(
+            occupied, g.index.set_of(alt.candidates), alt.count, wt)
+        if fit is not None and (best_start is None or fit[0] < best_start):
+            best_start = fit[0]
+    if best_start is None:
+        assert got is None
+    else:
+        assert got is not None
+        assert abs(got[0] - best_start) <= EPS, (got, best_start)
+
+
+def test_min_start_tiebreaks_by_fragmentation_then_declared_order():
+    g = Gantt(set(range(1, 9)), 0.0)
+    g.occupy({2, 4}, 0.0, 100.0)          # fragment the low id range
+    frag = CompiledAlternative(g.index.mask_of({1, 2, 3, 4, 5}), [], None,
+                               3, 1, None, 3)      # picks {1,3,5}: 3 runs
+    tight = CompiledAlternative(g.index.mask_of({6, 7, 8}), [], None,
+                                3, 1, None, 3)     # picks {6,7,8}: 1 run
+    job = JobView(idJob=1, nbNodes=3, weight=1, maxTime=10.0,
+                  submissionTime=0.0, candidates=frag.candidates,
+                  alternatives=[frag, tight], select_best=True)
+    start, chosen, wt, override = find_fit(g, job, 0.0)
+    assert start == 0.0
+    assert g.index.set_of(chosen) == {6, 7, 8}     # less fragmented wins
+    assert fragmentation(chosen) == 1
+    # equal fragmentation -> declared order (determinism)
+    a = CompiledAlternative(g.index.mask_of({6, 7}), [], None, 2, 1, None, 2)
+    b = CompiledAlternative(g.index.mask_of({7, 8}), [], None, 2, 1, None, 2)
+    job2 = JobView(idJob=2, nbNodes=2, weight=1, maxTime=10.0,
+                   submissionTime=0.0, candidates=a.candidates,
+                   alternatives=[a, b], select_best=True)
+    _, chosen2, _, _ = find_fit(g, job2, 0.0)
+    assert g.index.set_of(chosen2) == {6, 7}
+
+
+def test_knob_off_keeps_declared_order_contract():
+    """With select_best disabled (the default), the first satisfiable
+    alternative wins even when a later one could start earlier — the
+    documented request-language contract, byte-identical to pre-PR."""
+    g = Gantt(set(range(1, 5)), 0.0)
+    g.occupy({1, 2}, 0.0, 100.0)
+    late = CompiledAlternative(g.index.mask_of({1, 2}), [], None, 2, 1, None, 2)
+    early = CompiledAlternative(g.index.mask_of({3, 4}), [], None, 2, 1, None, 2)
+    job = JobView(idJob=1, nbNodes=2, weight=1, maxTime=10.0,
+                  submissionTime=0.0, candidates=late.candidates,
+                  alternatives=[late, early])      # select_best defaults off
+    start, chosen, _, _ = find_fit(g, job, 0.0)
+    assert start == 100.0 and g.index.set_of(chosen) == {1, 2}
+    job_on = JobView(idJob=1, nbNodes=2, weight=1, maxTime=10.0,
+                     submissionTime=0.0, candidates=late.candidates,
+                     alternatives=[late, early], select_best=True)
+    start_on, chosen_on, _, _ = find_fit(g, job_on, 0.0)
+    assert start_on == 0.0 and g.index.set_of(chosen_on) == {3, 4}
+
+
+@settings(max_examples=40, deadline=None)
+@given(occupations, alternative_descs)
+def test_min_start_never_later_than_first_satisfiable(occ, alt_descs):
+    """Property: the knob can only improve (or equal) the start time of the
+    declared-order contract — flipping it on never delays a job."""
+    def build(select_best):
+        g = Gantt(set(RES), 0.0)
+        for rids, start, dur in occ:
+            g.occupy(set(rids), start, start + dur)
+        alternatives = [
+            CompiledAlternative(g.index.mask_of(cands), [], None,
+                                min(count, len(cands)), 1, wt,
+                                min(count, len(cands)))
+            for cands, count, wt in alt_descs]
+        job = JobView(idJob=1, nbNodes=alternatives[0].count, weight=1,
+                      maxTime=30.0, submissionTime=0.0,
+                      candidates=alternatives[0].candidates,
+                      alternatives=alternatives, select_best=select_best)
+        return find_fit(g, job, 0.0)
+
+    first = build(False)
+    best = build(True)
+    assert (first is None) == (best is None)
+    if first is not None:
+        assert best[0] <= first[0] + EPS
+
+
+def test_victim_prune_drops_unnecessary_kills():
+    """An early victim taken on the wrong block is pruned once a later one
+    completes a block — best-effort jobs whose reclamation buys nothing are
+    not killed."""
+    from repro.core.metascheduler import MetaScheduler
+    from repro.core.resourceindex import ResourceIndex
+    idx = ResourceIndex(range(1, 9))     # rids 1-4 = switch A, 5-8 = switch B
+    blocks = [idx.mask_of({1, 2, 3, 4}), idx.mask_of({5, 6, 7, 8})]
+
+    def selector(avail: int) -> int:     # /switch=1/host=3
+        for b in blocks:
+            sub = avail & b
+            if sub.bit_count() >= 3:
+                chosen, n = 0, 0
+                while n < 3:
+                    lsb = sub & -sub
+                    chosen |= lsb
+                    sub ^= lsb
+                    n += 1
+                return chosen
+        return 0
+
+    alt = CompiledAlternative(idx.full_mask, [], selector, 3, 1, None, 3)
+    free_now = idx.mask_of({1, 5})       # one free host per switch
+    victims = [{"idJob": 101}, {"idJob": 102}]
+    victim_masks = {101: idx.mask_of({2}),        # 1 host on A: not enough
+                    102: idx.mask_of({6, 7})}     # completes B with rid 5
+    chosen = MetaScheduler._victims_for_request([alt], free_now, victims,
+                                                victim_masks)
+    assert chosen == [102]               # 101 pruned: killing it buys nothing
+
+
+def test_deadline_metrics_mid_run_pending_not_miss():
+    """Sampling the scorecard mid-run: an in-flight job whose deadline is
+    still ahead is pending, not a miss."""
+    from repro.core import ClusterSimulator
+    sim = ClusterSimulator(n_nodes=1, weight=1)
+    sim.submit(0.0, duration=100, max_time=100, deadline=1000.0)
+    sim.run(until=50.0)                  # job is Running, on track
+    dm = sim.deadline_metrics()
+    assert dm == {"jobs": 1, "completed": 0, "decided": 0, "pending": 1,
+                  "hits": 0, "hit_rate": 1.0, "mean_slack_s": 0.0,
+                  "min_slack_s": 0.0}
+    sim.run()
+    dm = sim.deadline_metrics()
+    assert dm["decided"] == 1 and dm["pending"] == 0 and dm["hit_rate"] == 1.0
+
+
+def test_simulator_validates_policy_and_moldable_up_front():
+    import pytest
+    from repro.core import ClusterSimulator
+    with pytest.raises(KeyError):
+        ClusterSimulator(policy="efd")           # typo: fail at construction
+    with pytest.raises(ValueError):
+        ClusterSimulator(moldable="min-start")   # not silently 'first'
+
+
+def test_flat_submit_deadline_reflects_admission_rewrite():
+    """JobRecord.deadline must come from the stored row, not the submit
+    payload — an admission rule may rewrite it (flat path parity with the
+    request path's read-back)."""
+    from repro.core import ClusterSimulator
+    from repro.core.admission import add_rule
+    sim = ClusterSimulator(n_nodes=1, weight=1)
+    add_rule(sim.db, "if job.get('deadline') is not None:\n"
+                     "    job['deadline'] = job['deadline'] + 500.0")
+    sim.submit(0.0, duration=10, max_time=10, deadline=100.0)
+    recs = sim.run()
+    assert recs[0].deadline == 600.0
+    assert recs[0].met_deadline()
+
+
+def test_deadline_metrics_slack_excludes_killed_jobs():
+    """A preempted job's stop is its kill time — counting that as slack
+    would report healthy time-to-spare for a job that never delivered."""
+    from repro.core import ClusterSimulator
+    sim = ClusterSimulator(n_nodes=2, weight=1)
+    sim.submit(0.0, duration=1000, max_time=2000, queue="besteffort",
+               deadline=5000.0)
+    sim.submit(5.0, duration=10, max_time=20, nb_nodes=2)   # forces preemption
+    sim.run(until=100)
+    dm = sim.deadline_metrics()
+    assert dm["mean_slack_s"] == 0.0 and dm["min_slack_s"] == 0.0
+
+
+# ------------------------------------------------- EDF through the real DB
+def test_unreachable_deadline_rejected_not_crashing_the_sim():
+    """Admission rule 12 rejects a deadline the walltime cannot meet; the
+    simulator logs the rejection and carries on — like oarsub exiting
+    non-zero, not like the control plane falling over."""
+    from repro.core import ClusterSimulator
+    sim = ClusterSimulator(n_nodes=2, weight=1)
+    sim.submit(0.0, duration=100, max_time=100, deadline=50.0)   # unreachable
+    sim.submit(0.0, duration=10, max_time=10)
+    recs = sim.run()
+    assert len(recs) == 1 and recs[0].state == "Terminated"
+    assert sim.db.scalar(
+        "SELECT COUNT(*) FROM event_log WHERE message LIKE "
+        "'submission rejected:%'") == 1
+
+
+def test_edf_policy_reads_deadline_through_typed_request_path():
+    """End-to-end: a deadline submitted via the request grammar
+    (', deadline=T') reaches jobs.deadline and reorders an edf queue."""
+    from repro.core import ClusterSimulator
+    sim = ClusterSimulator(n_nodes=1, weight=1, policy="edf",
+                           scheduler_period=1e9)
+    sim.submit(0.0, duration=100, max_time=100, request="/host=1")
+    sim.submit(0.0, duration=100, max_time=100,
+               request="/host=1, deadline=150")
+    recs = sim.run()
+    st_ = {r.idJob: r for r in recs}
+    assert st_[2].deadline == 150.0
+    assert st_[2].start == 0.0           # tight deadline jumps the queue
+    assert st_[2].met_deadline()
+    assert st_[1].start == 100.0

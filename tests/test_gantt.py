@@ -5,6 +5,7 @@ a window iff no occupy interval covering any part of the window removed it;
 find_slot never returns resources that violate that."""
 
 import math
+import random
 
 from hypothesis import given, settings, strategies as st
 
@@ -44,6 +45,40 @@ def test_prefer_order():
     g = Gantt({1, 2, 3}, origin=0.0)
     _, rids = g.find_slot({1, 2, 3}, 1, 1.0, prefer=[3, 1, 2])
     assert rids == {3}
+
+
+def test_slot_count_stays_bounded_under_churn():
+    """The lazy coalescing pass (ROADMAP "bitmask Gantt follow-on"): churny
+    occupy/release traffic leaves boundaries where nothing changed; without
+    coalescing this timeline grows one slot pair per operation (~1200 slots
+    here), with it the count stays within the lazy-trigger envelope."""
+    g = Gantt(set(range(1, 9)), origin=0.0)
+    rnd = random.Random(7)
+    for _ in range(600):
+        start = rnd.uniform(0, 1000)
+        dur = rnd.uniform(1, 50)
+        rid = rnd.randint(1, 8)
+        g.occupy({rid}, start, start + dur)
+        g.release({rid}, start, start + dur)
+    assert len(g.slots) <= 2 * Gantt._COALESCE_FLOOR
+    # the fully-released timeline is semantically one slot: everything free
+    assert all(s.free == g.all_mask for s in g.slots)
+
+
+def test_coalescing_preserves_queries():
+    """Merging equal-mask boundaries must not change what find_slot sees:
+    force a coalesce and compare free_at/find_slot before and after."""
+    g = Gantt(set(range(1, 5)), origin=0.0)
+    g.occupy({1, 2}, 10.0, 20.0)
+    g.occupy({3}, 15.0, 30.0)
+    g.release({3}, 15.0, 30.0)          # leaves redundant boundaries
+    before = [(t, g.free_at(t)) for t in (0.0, 12.0, 16.0, 25.0, 40.0)]
+    fit_before = g.find_slot({1, 2, 3, 4}, 4, 5.0)
+    g._coalesce()
+    assert [(t, g.free_at(t)) for t in (0.0, 12.0, 16.0, 25.0, 40.0)] == before
+    assert g.find_slot({1, 2, 3, 4}, 4, 5.0) == fit_before
+    # boundaries where nothing changed are gone
+    assert [s.start for s in g.slots] == [0.0, 10.0, 20.0]
 
 
 intervals = st.lists(

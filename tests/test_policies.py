@@ -71,7 +71,7 @@ def test_conservative_policies_place_every_feasible_job(job_descs):
     jobs (no starvation), with non-overlapping resource-time claims."""
     jobs = [J(i + 1, n, t, RES) for i, (n, t) in enumerate(job_descs)]
     for policy in ("fifo", "fifo_backfill", "sjf_resources",
-                   "greedy_small_first"):
+                   "greedy_small_first", "edf"):
         placements = _run(policy, jobs)
         assert len(placements) == len(jobs), policy
         # pairwise: same resource never claimed for overlapping windows

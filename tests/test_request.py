@@ -288,6 +288,151 @@ def test_admission_deadline_rule():
     assert "deadline" in str(exc_info.value)
 
 
+def test_admission_deadline_rule_uses_best_case_alternative():
+    """Rule 12 judges reachability by the shortest alternative walltime —
+    a moldable job whose quick shape can meet the deadline is admitted,
+    one that cannot even in the best case is rejected (and a rejected rule
+    is a real rejection, not a silently-voided rule: comprehensions inside
+    exec() would NameError and admit everything)."""
+    db = connect()
+    add_resources(db, [f"h{i}" for i in range(8)])
+    jid = oarsub(db, "x", max_time=500.0, deadline=60.0,
+                 request="/host=2, walltime=50 | /host=8", clock=lambda: 0.0)
+    assert db.scalar("SELECT deadline FROM jobs WHERE idJob=?", (jid,)) == 60.0
+    with pytest.raises(Exception) as exc_info:
+        oarsub(db, "x", max_time=500.0, deadline=10.0,
+               request="/host=2, walltime=50 | /host=8", clock=lambda: 0.0)
+    assert "unreachable" in str(exc_info.value)
+    # the message cites the best-case need, not the job maxTime
+    assert "50.0s" in str(exc_info.value)
+
+
+def test_deadline_option_parse_roundtrip():
+    (alt,) = parse_request("/host=4, deadline=7200")
+    assert alt.deadline == 7200.0
+    assert "deadline=7200" in canonical_request([alt])
+    assert parse_request(canonical_request([alt])) == [alt]
+    # round-trips through the canonical JSON too
+    assert request_from_json(request_to_json([alt])) == [alt]
+    # epoch-scale absolute deadlines must round-trip exactly (a %g rendering
+    # would shift 1690000123.5 by minutes)
+    (epoch,) = parse_request("/host=1, deadline=1690000123.5")
+    assert parse_request(canonical_request([epoch])) == [epoch]
+    assert epoch.deadline == 1690000123.5
+    # and its absence keeps the pre-deadline JSON byte-identical
+    (plain,) = parse_request("/host=4")
+    assert "deadline" not in request_to_json([plain])
+    with pytest.raises(BadRequest):
+        parse_request("/host=4, deadline=-5")
+
+
+def test_admission_rewrite_refreshes_deadline_mirror():
+    """A rule that rewrites the request's deadline options must be
+    reflected in jobs.deadline — the stored row can never contradict the
+    stored resourceRequest (same refresh contract as the nbNodes mirror)."""
+    from repro.core.admission import add_rule
+    db = connect()
+    add_resources(db, [f"h{i}" for i in range(4)])
+    add_rule(db, "for alt in job.get('request') or []:\n"
+                 "    if alt.get('deadline') is not None:\n"
+                 "        alt['deadline'] = alt['deadline'] + 1000.0")
+    jid = oarsub(db, "x", max_time=100.0, request="/host=1, deadline=5000",
+                 clock=lambda: 0.0)
+    row = db.query_one("SELECT deadline, resourceRequest FROM jobs "
+                       "WHERE idJob=?", (jid,))
+    assert row["deadline"] == 6000.0
+    assert request_from_json(row["resourceRequest"])[0].deadline == 6000.0
+    # an explicit keyword deadline is not touched by request rewrites
+    jid2 = oarsub(db, "x", max_time=100.0, request="/host=1",
+                  deadline=4000.0, clock=lambda: 0.0)
+    assert db.scalar("SELECT deadline FROM jobs WHERE idJob=?", (jid2,)) \
+        == 4000.0
+
+
+def test_request_grammar_deadline_reaches_jobs_column():
+    """The tightest deadline across moldable alternatives becomes the job's
+    deadline; mixing it with the deadline= keyword is ambiguous."""
+    db = connect()
+    add_resources(db, [f"h{i}" for i in range(4)])
+    jid = oarsub(db, "x", max_time=100.0,
+                 request="/host=4, deadline=9000 | /host=2, deadline=7000",
+                 clock=lambda: 0.0)
+    assert db.scalar("SELECT deadline FROM jobs WHERE idJob=?", (jid,)) == 7000.0
+    with pytest.raises(BadRequest):
+        oarsub(db, "x", request="/host=1, deadline=7000", deadline=8000.0)
+
+
+def test_set_queue_knobs_validated():
+    from repro.core import set_queue
+    db = connect()
+    set_queue(db, "default", policy="edf", moldable="min_start")
+    row = db.query_one("SELECT policy, moldable FROM queues "
+                       "WHERE queueName='default'")
+    assert (row["policy"], row["moldable"]) == ("edf", "min_start")
+    with pytest.raises(ValueError):
+        set_queue(db, "default", moldable="always")
+    with pytest.raises(KeyError):
+        set_queue(db, "nope", policy="fifo")
+    with pytest.raises(KeyError):        # typo fails here, not on every pass
+        set_queue(db, "default", policy="efd")
+    with pytest.raises(ValueError):      # 'active' would silently unschedule
+        set_queue(db, "default", state="active")
+    assert db.scalar("SELECT policy FROM queues WHERE queueName='default'") \
+        == "edf"                          # the bad writes never landed
+
+
+def test_reopened_store_upgrades_superseded_rule_text(tmp_path):
+    """A store holding the pre-moldable rule-12 text (maxTime-only
+    reachability) is upgraded on reopen to the best-case default, so
+    migrated and fresh stores admit moldable deadline jobs identically —
+    while an administrator-edited rule is left alone (no exact match)."""
+    from repro.core.schema import SUPERSEDED_RULES
+    old_text, new_text = SUPERSEDED_RULES[0]
+    path = str(tmp_path / "old.db")
+    db = connect(path, fresh=True)
+    add_resources(db, [f"h{i}" for i in range(8)])
+    custom = "job.setdefault('launchingDirectory', '/site')  # admin rule"
+    with db.transaction() as cur:
+        cur.execute("UPDATE admission_rules SET rule=? WHERE rule=?",
+                    (old_text, new_text))
+        cur.execute("INSERT INTO admission_rules(priority, rule) VALUES (99,?)",
+                    (custom,))
+    db.close()
+    db2 = connect(path)
+    rules = {r["rule"] for r in db2.query("SELECT rule FROM admission_rules")}
+    assert new_text in rules and old_text not in rules
+    assert custom in rules                      # admin rule untouched
+    jid = oarsub(db2, "x", max_time=500.0, deadline=60.0,
+                 request="/host=2, walltime=50 | /host=8", clock=lambda: 0.0)
+    assert jid > 0                              # best-case semantics active
+    db2.close()
+
+
+def test_reopened_store_gains_moldable_queue_column(tmp_path):
+    """Queues-table migration: a store created before the moldable column
+    existed reopens with it (default 'first' — the legacy contract)."""
+    import sqlite3
+    path = str(tmp_path / "old.db")
+    db = connect(path, fresh=True)
+    add_resources(db, ["h0"])
+    db.close()
+    raw = sqlite3.connect(path)
+    raw.executescript(
+        "CREATE TABLE queues_old AS SELECT queueName, priority, policy, "
+        "state FROM queues;"
+        "DROP TABLE queues;"
+        "ALTER TABLE queues_old RENAME TO queues;")
+    raw.commit()
+    raw.close()
+    db2 = connect(path)
+    rows = db2.query("SELECT queueName, moldable FROM queues")
+    assert rows and all(r["moldable"] == "first" for r in rows)
+    # and the scheduler's per-queue knob query works against it
+    from repro.core import MetaScheduler
+    MetaScheduler(db2, clock=lambda: 0.0).run()
+    db2.close()
+
+
 def test_admission_rewrite_refreshes_legacy_mirror():
     """A rule that rewrites job['request'] must be reflected in the stored
     nbNodes/weight mirror columns (preemption deficits read them)."""

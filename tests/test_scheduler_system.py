@@ -1,8 +1,20 @@
 """End-to-end control-plane behaviour through the simulator: submission →
 scheduling → execution → termination, reservations, matching, queues,
-preemption, failures, elasticity. Each test is a scenario from the paper."""
+preemption, failures, elasticity. Each test is a scenario from the paper.
+
+Golden-trace replays at the bottom pin the exact schedules: the full ESP2
+run (flat and hierarchical, all five policies) must stay byte-identical to
+the pre-deadline-PR baseline captured in tests/golden/esp2_schedules.json,
+and a deterministic deadline workload pins the EDF tier's output."""
+
+import hashlib
+import json
+import os
+import random
 
 from repro.core import ClusterSimulator, api
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
 
 
 def states(sim):
@@ -150,3 +162,121 @@ def test_esp_multimode_reservations_honoured():
     r = run_esp_multimode("fifo_backfill", procs=8, seed=2)
     assert r.n_jobs == 230
     assert 0.3 < r.efficiency <= 1.0
+
+
+def test_preemption_frees_exact_block_for_hierarchical_request():
+    """Regression (request-aware preemption deficit): a hierarchical job
+    whose free-host COUNT suffices but whose block constraint is violated —
+    one free host on each of three switches for ``/switch=1/host=2`` — must
+    preempt exactly one best-effort victim to complete a switch block. The
+    old count-based deficit saw deficit <= 0 and never preempted, leaving
+    the job to wait out the best-effort walltimes."""
+    sim = ClusterSimulator(n_nodes=6, weight=1, switches_per_pod=3)
+    # switches: sw0.0 = host0/1, sw0.1 = host2/3, sw0.2 = host4/5; pin one
+    # best-effort job on one host of each switch
+    for h in ("pod0-host1", "pod0-host3", "pod0-host5"):
+        sim.submit(0.0, duration=5000, max_time=10000, queue="besteffort",
+                   request=f"/host=1{{hostname='{h}'}}")
+    sim.submit(5.0, duration=50, max_time=100, request="/switch=1/host=2")
+    recs = sim.run(until=600)
+    st = {r.idJob: r for r in recs}
+    assert st[4].state == "Terminated"
+    assert st[4].stop < 600          # ran long before any victim's walltime
+    preempted = [r for jid, r in st.items() if jid <= 3 and r.state == "Error"]
+    assert len(preempted) == 1       # exactly one victim, not all three
+    hosts = sorted(st[4].resources)  # placement captured while Running
+    rows = sim.db.query(
+        "SELECT switch FROM resources WHERE idResource IN (%s)"
+        % ",".join(map(str, hosts)))
+    assert len({r["switch"] for r in rows}) == 1   # single-switch placement
+
+
+def test_structurally_unsatisfiable_request_preempts_nobody():
+    """Companion regression: a request no victim set can ever satisfy
+    (``/switch=1/host=4`` on 2-host switches) must flag no best-effort
+    victims — killing would buy nothing and loop preempt/resubmit."""
+    sim = ClusterSimulator(n_nodes=6, weight=1, switches_per_pod=3)
+    for h in ("pod0-host1", "pod0-host3", "pod0-host5"):
+        sim.submit(0.0, duration=300, max_time=600, queue="besteffort",
+                   request=f"/host=1{{hostname='{h}'}}")
+    sim.submit(5.0, duration=50, max_time=100, request="/switch=1/host=4")
+    recs = sim.run(until=200)
+    st = {r.idJob: r for r in recs}
+    assert all(st[j].state != "Error" for j in (1, 2, 3))   # nobody killed
+    assert st[4].state == "Waiting"
+
+
+# ------------------------------------------------------- golden-trace replay
+def _schedule_signature(records) -> str:
+    lines = [f"{r.idJob}:{r.start:.6f}:{r.stop:.6f}:" +
+             "-".join(str(x) for x in sorted(r.resources))
+             for r in records]
+    return hashlib.sha256("\n".join(lines).encode()).hexdigest()
+
+
+def _run_esp_sim(policy: str, hier: bool):
+    from benchmarks.esp2 import esp_jobs
+    if hier:
+        sim = ClusterSimulator(n_nodes=32, weight=1, pods=2,
+                               switches_per_pod=2, policy=policy,
+                               check_nodes=False, scheduler_period=10_000.0)
+        jobs = esp_jobs(32, seed=0)
+        for j in jobs:
+            n = j["nb_nodes"]
+            if n <= 8:
+                req = f"/switch=1/host={n} | /pod=1/host={n}"
+            elif n <= 16:
+                req = f"/pod=1/host={n} | /host={n}"
+            else:
+                req = f"/host={n}"
+            sim.submit(0.0, duration=j["duration"], request=req,
+                       max_time=j["duration"], tag=j["tag"])
+    else:
+        sim = ClusterSimulator(n_nodes=34, weight=1, policy=policy,
+                               check_nodes=False, scheduler_period=10_000.0)
+        jobs = esp_jobs(34, seed=0)
+        for j in jobs:
+            sim.submit(0.0, duration=j["duration"], nb_nodes=j["nb_nodes"],
+                       max_time=j["duration"], tag=j["tag"])
+    return sim.run()
+
+
+def test_esp2_schedules_byte_identical_to_pre_deadline_baseline():
+    """With deadlines absent and moldable selection off (the defaults),
+    every one of the five policies must produce the exact pre-PR schedule —
+    start times AND resource assignments — on both the flat and the
+    hierarchical ESP2 workloads. Signatures were captured on the tree at
+    the previous PR's head, before any deadline/moldable code existed."""
+    with open(os.path.join(GOLDEN_DIR, "esp2_schedules.json")) as fh:
+        golden = json.load(fh)
+    for hier, section in ((False, "esp2_flat"), (True, "esp2_hier")):
+        for policy, want in golden[section].items():
+            records = _run_esp_sim(policy, hier)
+            assert len(records) == want["n_jobs"], (section, policy)
+            got = _schedule_signature(records)
+            assert got == want["sha256"], \
+                f"{section}/{policy}: schedule diverged from pre-PR baseline"
+
+
+def test_edf_deadline_workload_matches_golden_trace():
+    """Deterministic deadline workload pinning the EDF tier's output: job
+    starts, stops, placements and the deadline scorecard must replay
+    exactly (tests/golden/edf_trace.json)."""
+    sim = ClusterSimulator(n_nodes=8, weight=1, policy="edf",
+                           scheduler_period=1e9)
+    rng = random.Random(42)
+    for _ in range(40):
+        at = round(rng.uniform(0, 500), 3)
+        dur = round(rng.uniform(50, 300), 3)
+        n = rng.randint(1, 4)
+        dl = round(at + dur * rng.uniform(1.2, 6.0), 3)
+        sim.submit(at, duration=dur, nb_nodes=n, max_time=dur, deadline=dl)
+    recs = sim.run()
+    got = [[r.idJob, round(r.submit, 6), round(r.start, 6), round(r.stop, 6),
+            r.deadline, sorted(r.resources), r.state, r.met_deadline()]
+           for r in recs]
+    with open(os.path.join(GOLDEN_DIR, "edf_trace.json")) as fh:
+        golden = json.load(fh)
+    assert got == golden["trace"]
+    dm = sim.deadline_metrics()
+    assert round(dm["hit_rate"], 6) == golden["metrics"]["hit_rate"]
