@@ -1,0 +1,201 @@
+"""Fairness tier: karma fair-share under an adversarial flood + quota-pass
+margins.
+
+Two legs, recorded as the ``fairshare`` section of ``BENCH_sched.json``:
+
+* **1k-user adversarial workload** — one heavy user floods the cluster
+  with a long backlog of jobs at t=0, then a long tail of light users (one
+  small job each) trickles in behind the flood. Run twice on the identical
+  seeded workload: ``fifo_backfill`` (the unfair baseline — tail jobs queue
+  behind the whole flood in submission order) vs ``fairshare`` (window
+  consumption builds the heavy user's karma after its first completed wave,
+  and the multifactor priority then sorts every tail job ahead of the
+  flood's remainder). The acceptance bar: the tail's p95 wait stays flat
+  (bounded by roughly one job-length, instead of the flood's drain time)
+  while utilisation does not drop — fair-share reorders, it never idles a
+  resource the baseline would have used.
+
+* **quota-enabled headline pass** — one full meta-scheduler pass at the
+  scale suite's headline configuration (10k nodes, 500-job backlog) with
+  representative quota rules active (a per-user busy cap, a pooled
+  resource-hours budget, a besteffort-class cap) and the backlog spread
+  over many users, proving the in-sweep quota gate keeps the frozen seed
+  margins (>=5x pass wall, >=10x SQL) that PR 1 established.
+"""
+
+from __future__ import annotations
+
+import random
+import sys
+import time
+from dataclasses import dataclass
+
+from repro.core import ClusterSimulator, MetaScheduler, api, connect
+
+
+@dataclass
+class FairshareResult:
+    policy: str
+    nodes: int
+    tail_users: int
+    heavy_jobs: int
+    tail_p95_wait_s: float
+    tail_mean_wait_s: float
+    heavy_p95_wait_s: float
+    utilisation: float
+    makespan_s: float
+    wall_s: float
+
+
+@dataclass
+class QuotaPassResult:
+    nodes: int
+    backlog: int
+    users: int
+    quota_rules: int
+    schedule_pass_s: float
+    sql_per_pass: float
+    placed: int          # jobs moved to launch by the pass
+
+
+def _percentile(xs: list[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+
+def run_contention(policy: str, *, n_nodes: int = 32, n_tail: int = 1000,
+                   heavy_jobs: int = 160, tail_until: float = 1500.0,
+                   seed: int = 0) -> FairshareResult:
+    """The adversarial workload, identical for every policy (same seed):
+    user ``hog`` submits ``heavy_jobs`` 2-host/60s jobs in the first ten
+    virtual seconds; ``n_tail`` distinct users submit one 1-host/30s job
+    each, uniformly over ``[60, tail_until]`` — after the hog's first wave
+    has completed, so the accounting window already carries its karma."""
+    sim = ClusterSimulator(n_nodes=n_nodes, weight=1, policy=policy,
+                           scheduler_period=1e9,
+                           periods={"monitor": 1e9, "cancel": 1e9,
+                                    "resubmit": 1e9})
+    rng = random.Random(seed)
+    for i in range(heavy_jobs):
+        sim.submit(rng.uniform(0.0, 10.0), duration=60.0, nb_nodes=2,
+                   max_time=60.0, user="hog", project="hogproj")
+    for i in range(n_tail):
+        sim.submit(rng.uniform(60.0, tail_until), duration=30.0, nb_nodes=1,
+                   max_time=30.0, user=f"u{i:04d}", project="tail")
+    t0 = time.perf_counter()
+    records = sim.run()
+    wall = time.perf_counter() - t0
+    tail_waits = [r.wait for r in records
+                  if r.project == "tail" and r.wait is not None]
+    heavy_waits = [r.wait for r in records
+                   if r.user == "hog" and r.wait is not None]
+    return FairshareResult(
+        policy=policy, nodes=n_nodes, tail_users=n_tail,
+        heavy_jobs=heavy_jobs,
+        tail_p95_wait_s=round(_percentile(tail_waits, 0.95), 1),
+        tail_mean_wait_s=round(sum(tail_waits) / max(1, len(tail_waits)), 1),
+        heavy_p95_wait_s=round(_percentile(heavy_waits, 0.95), 1),
+        utilisation=round(sim.utilisation(), 4),
+        makespan_s=round(sim.now, 1),
+        wall_s=round(wall, 2))
+
+
+def run_quota_pass(n_nodes: int = 10000, backlog: int = 500, *,
+                   seed: int = 0, n_users: int = 40) -> QuotaPassResult:
+    """One full meta-scheduler pass at the headline scale configuration with
+    quota rules armed — the proof the in-sweep quota gate (popcounted
+    per-tenant timelines, zero per-job SQL) keeps the seed margins."""
+    db = connect()
+    pods = max(1, n_nodes // 256)
+    for p in range(pods):
+        count = n_nodes // pods + (1 if p < n_nodes % pods else 0)
+        api.add_resources(db, [f"p{p}-h{i}" for i in range(count)],
+                          weight=4, pod=p, switch=f"sw{p}")
+    # representative rule set: each user capped at a quarter of the cluster
+    # (floored at the largest job shape so admission still accepts every
+    # backlog job — the gate defers, it must not reject this mix), every
+    # project sharing one generous resource-hours pool, and the besteffort
+    # class confined to half the machine
+    api.set_quota(db, user="*", max_busy_resources=max(256, n_nodes // 4))
+    api.set_quota(db, project="*", max_resource_hours=500_000.0)
+    api.set_quota(db, job_type="besteffort", max_busy_resources=n_nodes // 2)
+    n_rules = len(api.list_quotas(db))
+    rng = random.Random(seed)
+    now = 1000.0
+    for _ in range(backlog):
+        n = rng.choice([1, 2, 4, 8, 16, 64, 256])
+        max_time = rng.uniform(600, 86400)
+        u = rng.randrange(n_users)
+        api.oarsub(db, "work", nb_nodes=n, max_time=max_time,
+                   user=f"user{u:02d}", project=f"proj{u % 8}",
+                   clock=lambda: now)
+    sched = MetaScheduler(db, clock=lambda: now)
+    q0 = db.query_count
+    t0 = time.perf_counter()
+    sched.run()
+    t_pass = time.perf_counter() - t0
+    sql = db.query_count - q0
+    # jobs the pass moved to launch right now (future-planned jobs stay
+    # Waiting — their slots live in the in-memory Gantt, not the DB)
+    placed = db.scalar("SELECT COUNT(DISTINCT idJob) FROM assignments") or 0
+    db.close()
+    return QuotaPassResult(n_nodes, backlog, n_users, n_rules,
+                           round(t_pass, 3), float(sql), placed)
+
+
+# the tail window outlasts the flood's drain time, so the run's final phase
+# is tail-driven under BOTH policies — utilisation then measures whether
+# fair-share idles resources mid-run (it must not; reordering is free),
+# not an artefact of which user's jobs happen to fragment the last wave
+SMOKE = dict(n_nodes=16, n_tail=100, heavy_jobs=40, tail_until=620.0)
+FULL = dict(n_nodes=32, n_tail=1000, heavy_jobs=160, tail_until=1900.0)
+QUOTA_PASS_NODES = 10000
+SMOKE_QUOTA_PASS_NODES = 1000
+
+
+def _print_table(results: list[FairshareResult]) -> None:
+    print(f"{'policy':>14s} {'nodes':>6s} {'tail':>5s} {'heavy':>6s} "
+          f"{'tail_p95_w':>11s} {'tail_mean_w':>12s} {'heavy_p95_w':>12s} "
+          f"{'util':>7s} {'makespan':>9s} {'wall_s':>7s}")
+    for r in results:
+        print(f"{r.policy:>14s} {r.nodes:6d} {r.tail_users:5d} "
+              f"{r.heavy_jobs:6d} {r.tail_p95_wait_s:11.1f} "
+              f"{r.tail_mean_wait_s:12.1f} {r.heavy_p95_wait_s:12.1f} "
+              f"{r.utilisation:7.4f} {r.makespan_s:9.1f} {r.wall_s:7.2f}")
+
+
+def _print_quota(r: QuotaPassResult) -> None:
+    print(f"{'nodes':>6s} {'backlog':>8s} {'users':>6s} {'rules':>6s} "
+          f"{'sched_pass_s':>13s} {'SQL/pass':>9s} {'placed':>7s}")
+    print(f"{r.nodes:6d} {r.backlog:8d} {r.users:6d} {r.quota_rules:6d} "
+          f"{r.schedule_pass_s:13.3f} {r.sql_per_pass:9.0f} {r.placed:7d}")
+
+
+def main(argv: list[str] | None = None, *, smoke: bool = False
+         ) -> list[FairshareResult]:
+    args = list(argv or [])
+    smoke = smoke or "--smoke" in args
+    kw = SMOKE if smoke else FULL
+    print("# adversarial flood: one heavy user vs a "
+          f"{kw['n_tail']}-user tail, unfair baseline vs fair-share"
+          + (" [smoke]" if smoke else ""))
+    results = [run_contention(p, **kw) for p in ("fifo_backfill", "fairshare")]
+    _print_table(results)
+    print("# quota-enabled scheduling pass at headline scale "
+          "(in-sweep gate vs the frozen seed margins)")
+    quota = run_quota_pass(SMOKE_QUOTA_PASS_NODES if smoke
+                           else QUOTA_PASS_NODES)
+    _print_quota(quota)
+    # deferred so direct-script runs can fix sys.path in __main__ first
+    from benchmarks.record import write_bench_sched
+    write_bench_sched(fairshare_results=results, quota_pass=quota,
+                      smoke=smoke)
+    return results
+
+
+if __name__ == "__main__":
+    import os
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    main(sys.argv[1:])

@@ -43,6 +43,7 @@ def _headline(results) -> object | None:
 def write_bench_sched(path: str = BENCH_PATH, *, scale_results=None,
                       burst_results=None, hier_results=None,
                       trace_result=None, edf_passes=None, edf_workload=None,
+                      fairshare_results=None, quota_pass=None,
                       smoke: bool | None = None) -> dict:
     """Merge suite results into BENCH_sched.json (section per suite, so
     scale, the hierarchical-request variant and burst can each emit
@@ -113,6 +114,36 @@ def write_bench_sched(path: str = BENCH_PATH, *, scale_results=None,
     if burst_results is not None:
         payload["burst_smoke" if smoke else "burst"] = \
             [dataclasses.asdict(r) for r in burst_results]
+    if fairshare_results is not None or quota_pass is not None:
+        # the fairness tier: adversarial-flood tail wait (unfair baseline vs
+        # fair-share on the identical seeded workload) and the quota-enabled
+        # headline pass vs the same frozen seed margins. Acceptance, guarded
+        # by the CI smoke check: tail_p95 (fairshare) <= tail_p95 (baseline),
+        # utilisation not below the baseline, and the quota pass keeps the
+        # >=5x wall / >=10x SQL seed margins.
+        section = {}
+        if fairshare_results is not None:
+            section["contention"] = \
+                [dataclasses.asdict(r) for r in fairshare_results]
+            p95 = {r.policy: r.tail_p95_wait_s for r in fairshare_results}
+            util = {r.policy: r.utilisation for r in fairshare_results}
+            if "fairshare" in p95 and "fifo_backfill" in p95:
+                section["tail_p95_fairshare"] = p95["fairshare"]
+                section["tail_p95_baseline"] = p95["fifo_backfill"]
+                section["utilisation_fairshare"] = util["fairshare"]
+                section["utilisation_baseline"] = util["fifo_backfill"]
+        if quota_pass is not None:
+            section["quota_pass"] = dataclasses.asdict(quota_pass)
+            if not smoke:
+                section["quota_pass_speedup_vs_seed"] = {
+                    "pass_wall": round(SEED_BASELINE["pass_wall_s"]
+                                       / quota_pass.schedule_pass_s, 2)
+                    if quota_pass.schedule_pass_s else None,
+                    "sql_per_pass": round(SEED_BASELINE["sql_per_pass"]
+                                          / quota_pass.sql_per_pass, 2)
+                    if quota_pass.sql_per_pass else None,
+                }
+        payload["fairshare_smoke" if smoke else "fairshare"] = section
     tmp = path + ".tmp"
     with open(tmp, "w") as fh:
         json.dump(payload, fh, indent=2, sort_keys=True)

@@ -13,6 +13,9 @@ Suites:
   scale          beyond-paper — meta-scheduler pass time up to 10k nodes,
                  idle-cluster no-op pass latency (dirty-flag fast path) and
                  the 100k-job end-to-end simulator trace
+  fairshare      beyond-paper — fairness tier: adversarial 1k-user flood
+                 (karma fair-share vs the unfair FIFO baseline) and the
+                 quota-enabled headline pass vs the frozen seed margins
 
 The scheduler-perf suites (scale, burst) additionally record their numbers
 in ``BENCH_sched.json`` (pass wall time, SQL queries per pass, speedup vs
@@ -26,9 +29,10 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import burst, complexity, esp2, parallel_jobs, scale
+from benchmarks import burst, complexity, esp2, fairshare, parallel_jobs, scale
 
-SUITES = ["complexity", "features", "esp2", "burst", "parallel_jobs", "scale"]
+SUITES = ["complexity", "features", "esp2", "burst", "parallel_jobs", "scale",
+          "fairshare"]
 
 
 def run_features() -> None:
@@ -78,6 +82,8 @@ def main(argv: list[str] | None = None) -> None:
             parallel_jobs.main()
         elif suite == "scale":
             scale.main(smoke=smoke)
+        elif suite == "fairshare":
+            fairshare.main(smoke=smoke)
         print(f"--- {suite} done in {time.perf_counter() - t:.1f}s")
     print(f"\nall suites done in {time.perf_counter() - t0:.1f}s")
 

@@ -11,7 +11,8 @@ experiments; `api` is the oarsub/oardel/oarstat command set.
 from repro.core.db import Database, connect
 from repro.core.api import (oarsub, oardel, oarstat, oarhold, oarresume,
                             oarnodes, add_resources, remove_resources,
-                            set_queue, AdmissionError, ClusterClient,
+                            set_queue, set_quota, list_quotas, drop_quota,
+                            AdmissionError, ClusterClient,
                             JobRequest, JobInfo, NodeInfo, UnknownJob,
                             InvalidStateTransition)
 from repro.core.request import (BadRequest, ResourceRequest, parse_request,
@@ -24,6 +25,7 @@ from repro.core.simulator import ClusterSimulator
 __all__ = [
     "Database", "connect", "oarsub", "oardel", "oarstat", "oarhold",
     "oarresume", "oarnodes", "add_resources", "remove_resources", "set_queue",
+    "set_quota", "list_quotas", "drop_quota",
     "AdmissionError", "CentralModule", "MetaScheduler", "Executor",
     "TaktukLauncher", "SimTransport", "ClusterSimulator",
     "ClusterClient", "JobRequest", "JobInfo", "NodeInfo",

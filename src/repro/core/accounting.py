@@ -1,0 +1,131 @@
+"""Fair-share accounting — the fairness tier's soft half.
+
+The ``accounting`` table holds per-tenant resource consumption rolled up
+into :data:`BUCKET`-wide rows, keyed ``(windowStart, user, project,
+queueName, jobType)``. It is fed O(changed) by a job-state observer on the
+single legal state-write path (``jobstate.set_state``): exactly when a job
+leaves Running — ``Running → Terminated`` or ``Running → toError`` — its
+``procs × elapsed`` product is split across the hour buckets it spanned and
+UPSERTed. No scan, no periodic sweeper; crash recovery keeps working because
+the table is derived data (worst case a crash loses the final rollup of
+jobs that died with the process — their resources were torn down anyway).
+
+Two consumers read it back:
+
+* the quota engine seeds its ``maxResourceHours`` counters from
+  :func:`window_usage` (one aggregate over the sliding window) each pass;
+* :func:`karma_map` turns window consumption shares into a *karma* factor
+  per ``(user, project)`` — higher for heavier consumers, zero for
+  strangers — which the ``fairshare`` policy folds into its multifactor
+  priority so heavy tenants drift toward the back of the queue without
+  ever starving (the age term is unbounded, karma is bounded by 1).
+"""
+
+from __future__ import annotations
+
+import math
+import time as _time
+
+from repro.core import jobstate
+from repro.core.quotas import RHOURS_WINDOW
+
+__all__ = ["BUCKET", "W_USER", "W_PROJECT", "install", "rollup_job",
+           "window_usage", "karma_map"]
+
+BUCKET = 3600.0     # rollup granularity (seconds); the sliding-window reads
+                    # quantise to it, so the window edge is sharp to one hour
+
+# karma blend: how much a tenant's user-level vs project-level share of the
+# window's total consumption moves its priority (OAR's karma idiom)
+W_USER = 0.30
+W_PROJECT = 0.10
+
+
+def install(db) -> None:
+    """Attach the rollup observer to a store handle (done by
+    ``db.connect``). Idempotent per handle — ``connect`` runs once."""
+    def _observe(jid: int, old: str, new: str) -> None:
+        if old == jobstate.RUNNING and new in (jobstate.TERMINATED,
+                                               jobstate.TO_ERROR):
+            rollup_job(db, jid)
+    db.add_state_observer(_observe)
+
+
+def rollup_job(db, jid: int) -> None:
+    """Charge one finished job's consumption to its tenant's buckets.
+
+    Runs inside the state observer, after the Running→final transition
+    committed but before the executor clears the job's assignments — the
+    resource count is still one COUNT away.
+    """
+    job = db.query_one(
+        "SELECT user, project, queueName, jobType, bestEffort, startTime, "
+        "stopTime FROM jobs WHERE idJob=?", (jid,))
+    if job is None or job["startTime"] is None:
+        return
+    nres = db.scalar("SELECT COUNT(*) FROM assignments WHERE idJob=?",
+                     (jid,)) or 0
+    if nres == 0:
+        return
+    clock = getattr(db, "clock", None) or _time.time
+    start = job["startTime"]
+    stop = job["stopTime"] if job["stopTime"] is not None else clock()
+    if stop <= start:
+        return
+    jt = "besteffort" if job["bestEffort"] else (job["jobType"] or "PASSIVE")
+    with db.transaction() as cur:
+        t = start
+        while t < stop:
+            b0 = math.floor(t / BUCKET) * BUCKET
+            seg = min(stop, b0 + BUCKET) - t
+            cur.execute(
+                "INSERT INTO accounting(windowStart, user, project, "
+                "queueName, jobType, consumed) VALUES (?,?,?,?,?,?) "
+                "ON CONFLICT(windowStart, user, project, queueName, jobType) "
+                "DO UPDATE SET consumed = consumed + excluded.consumed",
+                (b0, job["user"], job["project"], job["queueName"], jt,
+                 nres * seg))
+            t = b0 + BUCKET
+
+
+def window_usage(db, now: float):
+    """Per-tenant proc-seconds consumed inside the sliding window, as
+    ``[(tenant_tuple, proc_seconds)]`` ready for ``QuotaEngine.add_consumed``
+    (the stored jobType is already the quota class — besteffort folded)."""
+    return [((r["queueName"], r["project"], r["user"], r["jobType"]),
+             r["consumed"])
+            for r in db.query(
+                "SELECT queueName, project, user, jobType, "
+                "SUM(consumed) AS consumed FROM accounting "
+                "WHERE windowStart > ? GROUP BY queueName, project, user, "
+                "jobType", (now - RHOURS_WINDOW - BUCKET,))]
+
+
+def karma_map(db, now: float) -> dict[tuple[str, str], float]:
+    """``(user, project) -> karma`` over the sliding window.
+
+    Karma is the blended *share* of the window's total consumption the
+    tenant's user and project account for — in ``[0, W_USER + W_PROJECT]``,
+    0.0 for anyone absent from the window (the dict just omits them), and
+    strictly monotone in the tenant's own consumption, all else fixed (the
+    property the fairness tests pin down). A share, not a share-minus-
+    target: the sole consumer of a quiet window still carries full karma,
+    so a newcomer beats it on the first contended pass.
+    """
+    rows = db.query(
+        "SELECT user, project, SUM(consumed) AS c FROM accounting "
+        "WHERE windowStart > ? GROUP BY user, project",
+        (now - RHOURS_WINDOW - BUCKET,))
+    total = sum(r["c"] for r in rows)
+    if total <= 0:
+        return {}
+    by_user: dict[str, float] = {}
+    by_proj: dict[str, float] = {}
+    for r in rows:
+        by_user[r["user"]] = by_user.get(r["user"], 0.0) + r["c"]
+        by_proj[r["project"]] = by_proj.get(r["project"], 0.0) + r["c"]
+    return {
+        (r["user"], r["project"]):
+            W_USER * by_user[r["user"]] / total
+            + W_PROJECT * by_proj[r["project"]] / total
+        for r in rows}

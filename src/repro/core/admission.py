@@ -69,6 +69,10 @@ def _cluster_ctx(db) -> dict[str, Any]:
         "alive_nodes": alive["nodes"], "alive_procs": alive["procs"],
         "waiting_jobs": db.scalar("SELECT COUNT(*) FROM jobs WHERE state='Waiting'") or 0,
         "known_queues": [r["queueName"] for r in db.query("SELECT queueName FROM queues")],
+        # declared fairness quotas (tiny table) so rules can fast-fail
+        # submissions no quota will ever let run (default rule 21) or apply
+        # site policy on top of them
+        "quota_rules": [dict(r) for r in db.query("SELECT * FROM quota_rules")],
     }
 
 

@@ -37,7 +37,8 @@ from repro.core.request import (BadRequest, ResourceRequest, parse_request,
                                 request_from_json, request_to_json)
 
 __all__ = ["oarsub", "oardel", "oarstat", "oarhold", "oarresume", "oarnodes",
-           "add_resources", "remove_resources", "set_queue", "AdmissionError",
+           "add_resources", "remove_resources", "set_queue", "set_quota",
+           "list_quotas", "drop_quota", "AdmissionError",
            "ClusterClient", "JobRequest", "JobInfo", "NodeInfo",
            "UnknownJob", "InvalidStateTransition"]
 
@@ -74,7 +75,8 @@ def _normalise_request(request, nb_nodes: int, weight: int,
                      f"list of them, got {type(request).__name__}")
 
 
-def oarsub(db, command: str | dict, *, user: str = "user", queue: str | None = None,
+def oarsub(db, command: str | dict, *, user: str = "user",
+           project: str = "default", queue: str | None = None,
            nb_nodes: int = 1, weight: int = 1, max_time: float = 3600.0,
            properties: str = "", reservation_start: float | None = None,
            job_type: str = "PASSIVE", info_type: str = "",
@@ -114,6 +116,7 @@ def oarsub(db, command: str | dict, *, user: str = "user", queue: str | None = N
     first = alternatives[0]
     job: dict[str, Any] = {
         "jobType": job_type, "infoType": info_type, "user": user,
+        "project": project,
         "nbNodes": first.min_hosts, "weight": first.weight, "command": command,
         "maxTime": max_time, "properties": validate_properties(first.combined_filter),
         "launchingDirectory": launching_directory,
@@ -153,12 +156,13 @@ def oarsub(db, command: str | dict, *, user: str = "user", queue: str | None = N
         job["deadline"] = min(rewritten) if rewritten else None
     with db.transaction() as cur:
         cur.execute(
-            "INSERT INTO jobs(jobType, infoType, user, nbNodes, weight, command,"
-            " queueName, maxTime, properties, launchingDirectory, submissionTime,"
-            " reservation, reservationStart, bestEffort, message, resourceRequest,"
-            " deadline)"
-            " VALUES (?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?)",
-            (job["jobType"], job["infoType"], job["user"], job["nbNodes"],
+            "INSERT INTO jobs(jobType, infoType, user, project, nbNodes, weight,"
+            " command, queueName, maxTime, properties, launchingDirectory,"
+            " submissionTime, reservation, reservationStart, bestEffort, message,"
+            " resourceRequest, deadline)"
+            " VALUES (?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?)",
+            (job["jobType"], job["infoType"], job["user"],
+             job.get("project", "default"), job["nbNodes"],
              job["weight"], job["command"], job["queueName"], job["maxTime"],
              job["properties"], job["launchingDirectory"], job["submissionTime"],
              job.get("reservation", "None"), job.get("reservationStart"),
@@ -266,6 +270,55 @@ def set_queue(db, queue: str, *, policy: str | None = None,
     db.notify("scheduler")
 
 
+def set_quota(db, *, queue: str = "/", project: str = "/", user: str = "/",
+              job_type: str = "/", max_busy_resources: int = -1,
+              max_running_jobs: int = -1,
+              max_resource_hours: float = -1.0) -> int:
+    """Declare a fairness quota rule (the DB *is* the configuration).
+
+    Each selector is a literal value, ``'*'`` (one independent counter per
+    distinct value — "each user at most N") or ``'/'`` (one counter shared
+    by every value — a pool: "all of project X together at most N").
+    Unspecified selectors default to ``'/'``, so ``set_quota(user='alice',
+    max_busy_resources=4)`` caps alice's total footprint across every
+    queue, project and job type. Limits:
+    ``max_busy_resources`` caps concurrently-busy resources,
+    ``max_running_jobs`` concurrently-running jobs, ``max_resource_hours``
+    resource-hours over the accounting window plus the planned horizon;
+    ``-1`` leaves a dimension unlimited. Enforcement happens inside the
+    Gantt sweep (core/quotas.py) from the next scheduling pass. Returns the
+    rule id (``drop_quota`` removes it)."""
+    for name, limit in (("max_busy_resources", max_busy_resources),
+                        ("max_running_jobs", max_running_jobs)):
+        if limit != -1 and limit < 0:
+            raise ValueError(f"{name} must be >= 0 or -1 (unlimited)")
+    if max_resource_hours != -1 and max_resource_hours < 0:
+        raise ValueError("max_resource_hours must be >= 0 or -1 (unlimited)")
+    with db.transaction() as cur:
+        cur.execute(
+            "INSERT INTO quota_rules(queue, project, user, jobType,"
+            " maxBusyResources, maxRunningJobs, maxResourceHours)"
+            " VALUES (?,?,?,?,?,?,?)",
+            (queue, project, user, job_type, max_busy_resources,
+             max_running_jobs, max_resource_hours))
+        rule_id = cur.lastrowid
+    db.notify("scheduler")
+    return rule_id
+
+
+def list_quotas(db) -> list[dict]:
+    return [dict(r) for r in
+            db.query("SELECT * FROM quota_rules ORDER BY idQuota")]
+
+
+def drop_quota(db, rule_id: int) -> None:
+    with db.transaction() as cur:
+        cur.execute("DELETE FROM quota_rules WHERE idQuota=?", (rule_id,))
+        if cur.rowcount == 0:
+            raise KeyError(f"no such quota rule {rule_id}")
+    db.notify("scheduler")
+
+
 def add_resources(db, hostnames: list[str], *, weight: int = 1, pod: int = 0,
                   switch: str = "sw0", mem_gb: int = 16,
                   chip: str = "tpu-v5e") -> list[int]:
@@ -309,6 +362,7 @@ class JobRequest:
     walltime: float = 3600.0
     deadline: float | None = None
     user: str = "user"
+    project: str = "default"
     reservation_start: float | None = None
     best_effort: bool | None = None
     job_type: str = "PASSIVE"
@@ -320,6 +374,7 @@ class JobInfo:
     id: int
     state: str
     user: str
+    project: str
     queue: str
     command: str
     nb_nodes: int
@@ -341,7 +396,8 @@ class JobInfo:
         raw = row["resourceRequest"]
         return cls(
             id=row["idJob"], state=row["state"], user=row["user"],
-            queue=row["queueName"], command=row["command"],
+            project=row["project"], queue=row["queueName"],
+            command=row["command"],
             nb_nodes=row["nbNodes"], weight=row["weight"],
             max_time=row["maxTime"], properties=row["properties"],
             best_effort=bool(row["bestEffort"]),
@@ -398,8 +454,8 @@ class ClusterClient:
         elif overrides:
             raise TypeError("pass overrides inside the JobRequest")
         job_id = oarsub(
-            self.db, req.command, user=req.user, queue=req.queue,
-            max_time=req.walltime, request=req.request,
+            self.db, req.command, user=req.user, project=req.project,
+            queue=req.queue, max_time=req.walltime, request=req.request,
             reservation_start=req.reservation_start, job_type=req.job_type,
             best_effort=req.best_effort, deadline=req.deadline,
             **({"clock": self.clock} if self.clock else {}))
@@ -442,6 +498,17 @@ class ClusterClient:
             "FROM resources r WHERE r.idResource IN "
             " (SELECT idResource FROM assignments WHERE idJob=?) "
             "ORDER BY r.idResource", (job_id,))]
+
+    # -------------------------------------------------------------- fairness
+    def set_quota(self, **kw) -> int:
+        """Declare a quota rule — see :func:`set_quota` for the knobs."""
+        return set_quota(self.db, **kw)
+
+    def quotas(self) -> list[dict]:
+        return list_quotas(self.db)
+
+    def drop_quota(self, rule_id: int) -> None:
+        drop_quota(self.db, rule_id)
 
     # ------------------------------------------------------------ elasticity
     def resize(self, add: list[str] | None = None,

@@ -244,4 +244,9 @@ def connect(path: str = ":memory:", *, fresh: bool = False) -> Database:
         with db.transaction() as cur:
             for ddl in schema.ALL_INDEXES:
                 cur.execute(ddl)
+    # fair-share accounting rides the job-state observer (O(changed) rollup
+    # when a job leaves Running); imported here, not at module top, because
+    # accounting sits above the store in the layering
+    from repro.core import accounting
+    accounting.install(db)
     return db

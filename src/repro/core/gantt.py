@@ -236,6 +236,7 @@ class Gantt:
         *,
         exact_start: float | None = None,
         prefer_bits: list[int] | None = None,
+        accept=None,
     ) -> tuple[float, int] | None:
         """Mask-native earliest first-fit: ``candidates`` and the returned
         chosen resources are bitmasks over :attr:`index`."""
@@ -248,7 +249,8 @@ class Gantt:
             return _choose_mask(avail, count, prefer_bits)
 
         return self.find_slot_select(candidates, duration, selector,
-                                     after, exact_start=exact_start)
+                                     after, exact_start=exact_start,
+                                     accept=accept)
 
     def find_slot_select(
         self,
@@ -258,6 +260,7 @@ class Gantt:
         after: float | None = None,
         *,
         exact_start: float | None = None,
+        accept=None,
     ) -> tuple[float, int] | None:
         """Earliest start where ``selector(avail)`` accepts the free mask.
 
@@ -267,6 +270,12 @@ class Gantt:
         switch, whole blocks, …); :meth:`find_slot_mask` is the plain
         count-based instance. The sweep is the same sliding-window AND either
         way; ``selector`` is consulted once per candidate start.
+
+        ``accept(start, chosen) -> bool`` is an optional second gate applied
+        after the selector: the quota tier's hook, consulted on resource
+        availability *and* tenant budget alike. A rejected start just moves
+        the sweep to the next boundary; ``None`` (the default) keeps the hot
+        path free of any per-start call.
         """
         after = self.origin if after is None else max(after, self.origin)
         if after == INF:
@@ -274,7 +283,10 @@ class Gantt:
         if exact_start is not None:
             avail = self._window_free(exact_start, exact_start + duration, candidates)
             chosen = selector(avail)
-            return (exact_start, chosen) if chosen else None
+            if not chosen or (accept is not None
+                              and not accept(exact_start, chosen)):
+                return None
+            return (exact_start, chosen)
         # One sweep: candidate starts are `after` plus every later slot
         # boundary; the window intersection slides right with them. The
         # sliding AND holds exactly the slots [lo, j] (empty when j < lo).
@@ -296,7 +308,7 @@ class Gantt:
             if j < i:
                 continue  # degenerate window (duration <= 0): nothing covered
             chosen = selector(candidates & win.value())
-            if chosen:
+            if chosen and (accept is None or accept(t, chosen)):
                 return t, chosen
         return None
 

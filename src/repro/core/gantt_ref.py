@@ -110,15 +110,23 @@ class ReferenceGantt:
         *,
         exact_start: float | None = None,
         prefer: list[int] | None = None,
+        accept=None,
     ) -> tuple[float, set[int]] | None:
-        """Earliest first-fit of ``count`` resources for ``duration``."""
+        """Earliest first-fit of ``count`` resources for ``duration``.
+
+        ``accept(start, chosen_rids) -> bool`` mirrors the production
+        sweep's quota gate: a rejected start moves on to the next boundary.
+        """
         if count <= 0:
             return (after if after is not None else self.origin, set())
         after = self.origin if after is None else max(after, self.origin)
         if exact_start is not None:
             avail = self._window_free(exact_start, exact_start + duration, candidates)
             if len(avail) >= count:
-                return exact_start, self._choose(avail, count, prefer)
+                chosen = self._choose(avail, count, prefer)
+                if accept is not None and not accept(exact_start, chosen):
+                    return None
+                return exact_start, chosen
             return None
         # candidate start times: `after` plus every slot boundary >= after
         starts = {after}
@@ -126,7 +134,9 @@ class ReferenceGantt:
         for t in sorted(starts):
             avail = self._window_free(t, t + duration, candidates)
             if len(avail) >= count:
-                return t, self._choose(avail, count, prefer)
+                chosen = self._choose(avail, count, prefer)
+                if accept is None or accept(t, chosen):
+                    return t, chosen
         return None
 
     def find_slot_mask(
@@ -138,12 +148,17 @@ class ReferenceGantt:
         *,
         exact_start: float | None = None,
         prefer_bits: list[int] | None = None,
+        accept=None,
     ) -> tuple[float, int] | None:
         """Mask-facing adapter so the real policies run on the reference."""
         prefer = ([self.index.rid_of(b) for b in prefer_bits]
                   if prefer_bits is not None else None)
+        mask_accept = None
+        if accept is not None:
+            mask_accept = lambda t, rids: accept(t, self.index.mask_of(rids))
         fit = self.find_slot(self.index.set_of(candidates), count, duration,
-                             after, exact_start=exact_start, prefer=prefer)
+                             after, exact_start=exact_start, prefer=prefer,
+                             accept=mask_accept)
         if fit is None:
             return None
         start, rids = fit

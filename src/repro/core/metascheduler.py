@@ -47,11 +47,13 @@ from __future__ import annotations
 
 import time as _time
 
-from repro.core import jobstate
+from repro.core import accounting, jobstate
 from repro.core.gantt import EPS, Gantt
 from repro.core.matching import (BadProperties, compile_alternatives,
                                  match_resources)
-from repro.core.policies import JobView, Placement, find_fit, get_policy
+from repro.core.policies import (JobView, Placement, commit_placement,
+                                 find_fit, get_policy)
+from repro.core.quotas import QuotaEngine, tenant_of
 from repro.core.request import BadRequest, request_from_json
 from repro.core.resourceindex import HierarchyIndex, ResourceIndex
 
@@ -74,6 +76,9 @@ class PassCache:
         # canonical resourceRequest JSON -> [CompiledAlternative] | error
         self._compiled: dict[str, list | Exception] = {}
         self._hierarchy: HierarchyIndex | None = None
+        # the pass's QuotaEngine, or None when quota_rules is empty (the
+        # common case pays one COUNT-sized query and nothing else)
+        self.quotas: QuotaEngine | None = None
 
     def candidates(self, properties: str, min_weight: int) -> tuple[int, list[int]]:
         """Matched resources as (bitmask, preference bit order); raises
@@ -176,6 +181,7 @@ class MetaScheduler:
         alive = self._alive_resources()
         gantt = self._build_gantt(alive, now)
         cache = PassCache(self.db, gantt.index)
+        self._init_quotas(cache, now)
         self._schedule_reservations(gantt, cache, now, summary)
         placements = self._schedule_queues(gantt, cache, now, summary)
         # timeline length after planning the whole backlog — the number the
@@ -219,6 +225,59 @@ class MetaScheduler:
             "SELECT MIN(reservationStart) FROM jobs WHERE state='Waiting' "
             "AND reservation='Scheduled'")
         return t if t is not None else float("inf")
+
+    # -------------------------------------------------------------- quotas
+    def _init_quotas(self, cache: PassCache, now: float) -> None:
+        """Build and seed the pass's :class:`QuotaEngine` — only when the
+        (tiny) ``quota_rules`` table has rows. Seeding mirrors
+        ``_build_gantt``: running jobs occupy their tenants' counters until
+        their predicted end, granted reservations over their slot, and the
+        accounting window charges the resource-hours already consumed —
+        so the in-sweep ``accept`` gate judges *total* tenant load, not
+        just what this pass plans."""
+        rules = self.db.query("SELECT * FROM quota_rules")
+        if not rules:
+            return
+        engine = QuotaEngine(rules)
+        index = cache.index
+        running: dict[int, list] = {}
+        for r in self.db.query(
+                "SELECT j.idJob, j.queueName, j.project, j.user, j.jobType, "
+                "j.bestEffort, j.startTime, j.maxTime, a.idResource "
+                "FROM jobs j JOIN assignments a ON a.idJob=j.idJob "
+                "WHERE j.state IN ('toLaunch','Launching','Running')"):
+            d = running.get(r["idJob"])
+            if d is None:
+                d = running[r["idJob"]] = [
+                    tenant_of(r["queueName"], r["project"], r["user"],
+                              r["jobType"], bool(r["bestEffort"])),
+                    r["startTime"], r["maxTime"], 0]
+            if r["idResource"] in index:
+                d[3] |= 1 << index.bit_of(r["idResource"])
+        for tenant, start, max_time, mask in running.values():
+            start = start if start is not None else now
+            engine.commit(tenant, mask, now, max(now, start + max_time))
+            engine.add_consumed(tenant,
+                                mask.bit_count() * max(0.0, now - start))
+        reserved: dict[int, list] = {}
+        for r in self.db.query(
+                "SELECT g.idJob, g.idResource, g.startTime, g.stopTime, "
+                "j.queueName, j.project, j.user, j.jobType, j.bestEffort "
+                "FROM gantt g JOIN jobs j ON j.idJob=g.idJob "
+                "WHERE j.state='Waiting' AND j.reservation='Scheduled'"):
+            d = reserved.get(r["idJob"])
+            if d is None:
+                d = reserved[r["idJob"]] = [
+                    tenant_of(r["queueName"], r["project"], r["user"],
+                              r["jobType"], bool(r["bestEffort"])),
+                    r["startTime"], r["stopTime"], 0]
+            if r["idResource"] in index:
+                d[3] |= 1 << index.bit_of(r["idResource"])
+        for tenant, start, stop, mask in reserved.values():
+            engine.commit(tenant, mask, start, stop)
+        for tenant, used in accounting.window_usage(self.db, now):
+            engine.add_consumed(tenant, used)
+        cache.quotas = engine
 
     # ----------------------------------------------------------- gantt init
     def _alive_resources(self) -> set[int]:
@@ -281,7 +340,9 @@ class MetaScheduler:
                                "reservation slot unavailable", now)
                 continue
             start, chosen, walltime, override = fit
-            gantt.occupy(chosen, start, start + walltime)
+            # occupy + charge the tenant's quota counters in one step, so
+            # later reservations and the queue pass see the reserved load
+            commit_placement(view, gantt, chosen, start, start + walltime)
             # negotiation: Waiting -> toAckReservation -> (ack) -> Waiting,
             # with reservation substate moved to 'Scheduled' and the slot
             # persisted in the gantt table.
@@ -318,13 +379,14 @@ class MetaScheduler:
             summary["launched"].append(job["idJob"])
 
     # -------------------------------------------------------------- queues
-    def _view(self, job, cache: PassCache, *,
-              select_best: bool = False) -> JobView:
+    def _view(self, job, cache: PassCache, *, select_best: bool = False,
+              queue_priority: int = 0, karma_map=None) -> JobView:
         """Jobs-table row -> JobView: compile the typed request when present
         (moldable alternatives); rows predating the request column schedule
         through the legacy flat path. ``select_best`` is the owning queue's
         moldable-selection knob (min-start alternative instead of declared
-        order). Raises BadRequest/BadProperties."""
+        order); ``queue_priority``/``karma_map`` feed the fairshare policy's
+        multifactor priority. Raises BadRequest/BadProperties."""
         request_json = job["resourceRequest"]
         alternatives = cache.compiled(request_json) if request_json else None
         if alternatives is not None:
@@ -332,34 +394,68 @@ class MetaScheduler:
             cands, prefer_bits = first.candidates, first.prefer_bits
         else:
             cands, prefer_bits = cache.candidates(job["properties"], job["weight"])
+        quota = None
+        if cache.quotas is not None:
+            quota = (cache.quotas,
+                     tenant_of(job["queueName"], job["project"], job["user"],
+                               job["jobType"], bool(job["bestEffort"])))
+        karma = (karma_map.get((job["user"], job["project"]), 0.0)
+                 if karma_map else 0.0)
         return JobView(
             idJob=job["idJob"], nbNodes=job["nbNodes"], weight=job["weight"],
             maxTime=job["maxTime"], submissionTime=job["submissionTime"],
             candidates=cands, prefer=prefer_bits,
             bestEffort=bool(job["bestEffort"]), alternatives=alternatives,
-            deadline=job["deadline"], select_best=select_best)
+            deadline=job["deadline"], select_best=select_best,
+            quota=quota, karma=karma, queue_priority=queue_priority)
 
     def _queue_jobs(self, queue: str, cache: PassCache, *,
-                    select_best: bool = False) -> list[JobView]:
+                    select_best: bool = False, queue_priority: int = 0,
+                    karma_map=None) -> list[JobView]:
         views = []
+        engine = cache.quotas
         for job in self.db.query(
                 "SELECT * FROM jobs WHERE state='Waiting' AND reservation='None' "
                 "AND queueName=? ORDER BY idJob", (queue,)):
             try:
-                views.append(self._view(job, cache, select_best=select_best))
+                view = self._view(job, cache, select_best=select_best,
+                                  queue_priority=queue_priority,
+                                  karma_map=karma_map)
             except (BadProperties, BadRequest) as exc:
                 self._to_error(job["idJob"], str(exc), self.clock())
+                continue
+            if engine is not None and view.quota is not None:
+                # structural screening: a job whose smallest shape exceeds
+                # the tightest instantaneous cap (or whose tenant is banned
+                # outright) can never run — error it out instead of keeping
+                # it Waiting forever behind an accept gate that never opens
+                tenant = view.quota[1]
+                need = (min(a.min_hosts for a in view.alternatives)
+                        if view.alternatives else view.nbNodes)
+                cap = engine.busy_cap(tenant)
+                if engine.jobs_banned(tenant) or (cap is not None and cap < need):
+                    self._to_error(job["idJob"],
+                                   "quota: no rule admits a job this size "
+                                   f"for {'/'.join(tenant)}", self.clock())
+                    continue
+            views.append(view)
         return views
 
     def _schedule_queues(self, gantt: Gantt, cache: PassCache, now: float,
                          summary: dict) -> list[Placement]:
         placements: list[Placement] = []
         queues = self.db.query(
-            "SELECT queueName, policy, moldable FROM queues WHERE state='Active' "
-            "ORDER BY priority DESC, queueName")
+            "SELECT queueName, policy, moldable, priority FROM queues "
+            "WHERE state='Active' ORDER BY priority DESC, queueName")
+        # karma is pass-scoped and only priced when a fairshare queue will
+        # actually read it (one aggregate over the accounting window)
+        karma = (accounting.karma_map(self.db, now)
+                 if any(q["policy"] == "fairshare" for q in queues) else None)
         for q in queues:
             jobs = self._queue_jobs(q["queueName"], cache,
-                                    select_best=q["moldable"] == "min_start")
+                                    select_best=q["moldable"] == "min_start",
+                                    queue_priority=q["priority"],
+                                    karma_map=karma)
             if not jobs:
                 continue
             policy = get_policy(q["policy"])
@@ -404,18 +500,21 @@ class MetaScheduler:
         unnecessary); rows predating the request column keep the
         count-based path.
         """
-        started = {p.idJob for p in placements if p.starts_now(now)}
-        blocked = [j for j in self.db.query(
-            "SELECT * FROM jobs WHERE state='Waiting' AND reservation='None' "
-            "AND bestEffort=0 ORDER BY idJob") if j["idJob"] not in started]
-        if not blocked:
-            return
+        # cheap gate first: with no live best-effort jobs there is nothing to
+        # preempt, and fetching the (possibly huge) waiting backlog would be
+        # pure per-pass overhead — the common case under burst submission.
         running_be = self.db.query(
             "SELECT j.idJob, j.startTime, j.nbNodes, COUNT(a.idResource) AS nres "
             "FROM jobs j JOIN assignments a ON a.idJob=j.idJob "
             "WHERE j.state IN ('toLaunch','Launching','Running') AND j.bestEffort=1 "
             "AND j.toCancel=0 GROUP BY j.idJob")
         if not running_be:
+            return
+        started = {p.idJob for p in placements if p.starts_now(now)}
+        blocked = [j for j in self.db.query(
+            "SELECT * FROM jobs WHERE state='Waiting' AND reservation='None' "
+            "AND bestEffort=0 ORDER BY idJob") if j["idJob"] not in started]
+        if not blocked:
             return
         if self.besteffort_victim_policy == "youngest_first":
             # cancel the youngest first "in an attempt to let the oldest progress"

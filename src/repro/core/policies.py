@@ -54,7 +54,8 @@ from dataclasses import dataclass, field
 from repro.core.gantt import EPS, Gantt, ResourceIndex
 
 __all__ = ["JobView", "Placement", "POLICIES", "register_policy",
-           "get_policy", "find_fit", "fragmentation", "EDF_AGING_WINDOW"]
+           "get_policy", "find_fit", "fragmentation", "commit_placement",
+           "multifactor_priority", "EDF_AGING_WINDOW", "FAIRSHARE_WEIGHTS"]
 
 # Starvation protection for the EDF tier: a job submitted without a deadline
 # competes as if it were due this long after submission, so it cannot be
@@ -84,6 +85,13 @@ class JobView:
     knob: ``False`` keeps the declared-order first-satisfiable contract,
     ``True`` scores every satisfiable alternative and places the one that
     starts earliest (fragmentation as tie-break).
+
+    The fairness tier adds three per-tenant fields, all inert by default:
+    ``quota`` is ``(engine, tenant)`` — a
+    :class:`~repro.core.quotas.QuotaEngine` and the job's resolved tenant
+    tuple — or ``None`` when no quota rules exist; ``karma`` is the tenant's
+    consumed-vs-entitled share from the accounting window (0 when fair-share
+    is off); ``queue_priority`` feeds the multifactor combiner.
     """
     idJob: int
     nbNodes: int
@@ -96,6 +104,9 @@ class JobView:
     alternatives: list | None = None
     deadline: float | None = None
     select_best: bool = False
+    quota: tuple | None = None
+    karma: float = 0.0
+    queue_priority: int = 0
 
     def effective_deadline(self) -> float:
         """The deadline the EDF tier orders by: the declared one, or the
@@ -172,8 +183,19 @@ def fragmentation(mask: int) -> int:
     return (mask & ~(mask >> 1)).bit_count()
 
 
+def _quota_gate(job: JobView, walltime: float):
+    """The per-start ``accept`` hook for the Gantt sweep: does placing this
+    job's chosen mask at ``t`` keep every applicable quota rule satisfied
+    over [t, t+walltime)? ``None`` when the job carries no quota binding."""
+    if job.quota is None:
+        return None
+    engine, tenant = job.quota
+    return lambda t, chosen: engine.check(tenant, chosen, t, t + walltime)
+
+
 def find_fit(gantt: Gantt, job: JobView, after: float | None, *,
-             exact_start: float | None = None, use_prefer: bool = True
+             exact_start: float | None = None, use_prefer: bool = True,
+             floors: dict | None = None
              ) -> tuple[float, int, float, float | None] | None:
     """Earliest fit for a job, honouring moldable alternatives.
 
@@ -189,36 +211,79 @@ def find_fit(gantt: Gantt, job: JobView, after: float | None, *,
     it differs from the job's stored maxTime. ``use_prefer=False``
     reproduces the legacy reservation path, which picks by ascending
     resource id.
+
+    ``floors`` is a per-policy-run memo mapping a placement signature — the
+    same shape (candidates, count, walltime) for the same tenant — to the
+    earliest start found so far (``math.inf`` once proven unsatisfiable).
+    Within one policy run the Gantt and the quota timelines are only ever
+    *occupied*, so the earliest fit of a fixed signature is monotonically
+    non-decreasing: later sweeps may resume from the recorded floor (or skip
+    outright) without changing any result. The start of a fit does not
+    depend on ``prefer`` (preference picks *which* resources, never *when*),
+    so signatures are shared across prefer variants. This collapses the
+    O(backlog × timeline) re-sweeps of a burst of identical submissions to
+    one sweep plus O(1) per extra job.
     """
+    use_floors = floors is not None and exact_start is None
+    tenant = job.quota[1] if job.quota is not None else None
     if job.alternatives:
         select_best = job.select_best and len(job.alternatives) > 1
         best: tuple[tuple[float, int, int], tuple] | None = None
         for k, alt in enumerate(job.alternatives):
             wt = alt.walltime if alt.walltime is not None else job.maxTime
+            lo, key = after, None
+            if use_floors:
+                # compiled alternatives are shared (PassCache memoises them
+                # per canonical request), so identity is the signature
+                key = (id(alt), wt, tenant)
+                f = floors.get(key)
+                if f is not None:
+                    if f == math.inf:
+                        continue
+                    lo = f if lo is None else max(lo, f)
             if alt.selector is None:
                 fit = gantt.find_slot_mask(
-                    alt.candidates, alt.count, wt, after=after,
+                    alt.candidates, alt.count, wt, after=lo,
                     exact_start=exact_start,
-                    prefer_bits=alt.prefer_bits if use_prefer else None)
+                    prefer_bits=alt.prefer_bits if use_prefer else None,
+                    accept=_quota_gate(job, wt))
             else:
                 fit = gantt.find_slot_select(alt.candidates, wt, alt.selector,
-                                             after=after,
-                                             exact_start=exact_start)
+                                             after=lo,
+                                             exact_start=exact_start,
+                                             accept=_quota_gate(job, wt))
             if fit is None:
+                if key is not None:
+                    floors[key] = math.inf
                 continue
+            if key is not None:
+                floors[key] = fit[0]
             override = wt if wt != job.maxTime else None
             if not select_best:
                 return fit[0], fit[1], wt, override
-            key = (fit[0], fragmentation(fit[1]), k)
-            if best is None or key < best[0]:
-                best = (key, (fit[0], fit[1], wt, override))
+            key2 = (fit[0], fragmentation(fit[1]), k)
+            if best is None or key2 < best[0]:
+                best = (key2, (fit[0], fit[1], wt, override))
         return best[1] if best is not None else None
     cand, prefer_bits = job.mask_and_prefer(gantt.index)
-    fit = gantt.find_slot_mask(cand, job.nbNodes, job.maxTime, after=after,
+    lo, key = after, None
+    if use_floors:
+        key = (cand, job.nbNodes, job.weight, job.maxTime, tenant)
+        f = floors.get(key)
+        if f is not None:
+            if f == math.inf:
+                return None
+            lo = f if lo is None else max(lo, f)
+    fit = gantt.find_slot_mask(cand, job.nbNodes, job.maxTime, after=lo,
                                exact_start=exact_start,
-                               prefer_bits=prefer_bits if use_prefer else None)
+                               prefer_bits=prefer_bits if use_prefer else None,
+                               accept=_quota_gate(job, job.maxTime))
     if fit is None:
+        if key is not None:
+            floors[key] = math.inf
         return None
+    if key is not None:
+        floors[key] = fit[0]
     return fit[0], fit[1], job.maxTime, None
 
 
@@ -240,6 +305,16 @@ def get_policy(name: str):
         raise KeyError(f"unknown scheduling policy {name!r}; have {sorted(POLICIES)}")
 
 
+def commit_placement(job: JobView, gantt: Gantt, chosen: int, start: float,
+                     stop: float) -> None:
+    """Occupy the Gantt and, when the job carries a quota binding, charge the
+    placement to its tenant's counters — the two timelines move together."""
+    gantt.occupy(chosen, start, stop)
+    if job.quota is not None:
+        engine, tenant = job.quota
+        engine.commit(tenant, chosen, start, stop)
+
+
 def _place_conservative(gantt: Gantt, ordered: list[JobView], now: float,
                         *, chain: bool = False) -> list[Placement]:
     """Place jobs in the given order, each at its earliest fit, occupying the
@@ -248,13 +323,14 @@ def _place_conservative(gantt: Gantt, ordered: list[JobView], now: float,
     (strict FIFO: each start >= previous start)."""
     out: list[Placement] = []
     floor = now
+    floors: dict = {}   # monotone earliest-fit memo, see find_fit
     index = gantt.index
     for job in ordered:
-        fit = find_fit(gantt, job, floor if chain else now)
+        fit = find_fit(gantt, job, floor if chain else now, floors=floors)
         if fit is None:
             continue  # never fits (bad properties); meta-scheduler flags it
         start, chosen, walltime, override = fit
-        gantt.occupy(chosen, start, start + walltime)
+        commit_placement(job, gantt, chosen, start, start + walltime)
         out.append(Placement(job.idJob, start, chosen, index=index,
                              walltime=override))
         if chain:
@@ -326,19 +402,20 @@ def easy_backfill(gantt: Gantt, jobs: list[JobView], now: float) -> list[Placeme
     out: list[Placement] = []
     head_start = math.inf
     head_planned = False
-    index = gantt.index
+    floors: dict = {}   # sound here too: fits without occupy leave both
+    index = gantt.index  # the Gantt and the floor's meaning unchanged
     for job in ordered:
-        fit = find_fit(gantt, job, now)
+        fit = find_fit(gantt, job, now, floors=floors)
         if fit is None:
             continue
         start, chosen, walltime, override = fit
         if start <= now + EPS:
-            gantt.occupy(chosen, start, start + walltime)
+            commit_placement(job, gantt, chosen, start, start + walltime)
             out.append(Placement(job.idJob, start, chosen, index=index,
                                  walltime=override))
         elif not head_planned:
             # first job that cannot run now gets the (only) reservation
-            gantt.occupy(chosen, start, start + walltime)
+            commit_placement(job, gantt, chosen, start, start + walltime)
             out.append(Placement(job.idJob, start, chosen, index=index,
                                  walltime=override))
             head_start, head_planned = start, True
@@ -347,7 +424,55 @@ def easy_backfill(gantt: Gantt, jobs: list[JobView], now: float) -> list[Placeme
             # (checked above); a job that would start after `now` but before
             # the head's reservation is fine too:
             if start + walltime <= head_start + EPS:
-                gantt.occupy(chosen, start, start + walltime)
+                commit_placement(job, gantt, chosen, start, start + walltime)
                 out.append(Placement(job.idJob, start, chosen, index=index,
                                      walltime=override))
     return out
+
+
+# ---------------------------------------------------------------- fair-share
+# Multifactor weights (the OAR-style combiner: queue priority × karma × age
+# × size). Karma is the tenant's consumed-minus-entitled share over the
+# accounting window (core/accounting.py), roughly in [-1, 1]; the age term
+# is deliberately *unbounded*, so a job from even the greediest tenant
+# eventually outranks fresh arrivals — the anti-starvation guarantee the
+# property suite pins down.
+FAIRSHARE_WEIGHTS = {
+    "queue_priority": 10.0,   # per unit of queues.priority
+    "karma": 50.0,            # penalty per unit of karma
+    "age": 1.0 / 3600.0,      # +1 per hour waited, unbounded
+    "size": 1.0,              # penalty per fraction of the cluster requested
+}
+
+
+def multifactor_priority(*, queue_priority: int = 0, karma: float = 0.0,
+                         age: float = 0.0, size: float = 0.0,
+                         weights: dict | None = None) -> float:
+    """The fairness tier's scalar priority — higher schedules first."""
+    w = weights or FAIRSHARE_WEIGHTS
+    return (w["queue_priority"] * queue_priority
+            - w["karma"] * karma
+            + w["age"] * age
+            - w["size"] * size)
+
+
+@register_policy("fairshare")
+def fairshare(gantt: Gantt, jobs: list[JobView], now: float) -> list[Placement]:
+    """Karma fair-share: multifactor order, then conservative placement.
+
+    Jobs are ordered by descending :func:`multifactor_priority` (queue
+    priority, minus the tenant's karma, plus unbounded aging, minus size),
+    tie-broken by ascending idJob. Placement stays conservative — every job
+    still gets a definite slot, so the paper's no-famine guarantee holds and
+    a high-karma tenant is *delayed*, never denied. With no accounting
+    history (all karma 0) and equal-size jobs the order degenerates to
+    submission order: byte-identical to ``fifo_backfill`` (differential
+    test)."""
+    total = max(1, len(gantt.index.rids))
+    def prio(j: JobView) -> float:
+        return multifactor_priority(
+            queue_priority=j.queue_priority, karma=j.karma,
+            age=max(0.0, now - j.submissionTime),
+            size=min(1.0, j.procs / total))
+    ordered = sorted(jobs, key=lambda j: (-prio(j), j.idJob))
+    return _place_conservative(gantt, ordered, now)

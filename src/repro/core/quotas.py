@@ -1,0 +1,198 @@
+"""Multi-tenant quotas — the fairness tier's hard-limit half.
+
+Administrators declare rules in the ``quota_rules`` table (see
+:func:`repro.core.api.set_quota`): each rule selects jobs along four axes —
+``[queue, project, user, jobType]`` — and caps, for the matching population,
+
+* ``maxBusyResources``  — resources busy at any instant,
+* ``maxRunningJobs``    — jobs running at any instant,
+* ``maxResourceHours``  — resource-hours over a sliding window
+  (:data:`RHOURS_WINDOW`), counting consumed *and* currently-planned time.
+
+Per axis a rule may name a concrete value, ``'*'`` (one counter **per
+distinct value** — "every user at most 40 resources"), or ``'/'`` (one
+counter **shared by all values** — "the whole besteffort class at most 100
+resources"). ``-1`` leaves a dimension uncapped.
+
+Enforcement lives *inside* the Gantt sweep, not in per-job SQL: the
+meta-scheduler builds one :class:`QuotaEngine` per pass (only when rules
+exist), seeds it with running jobs, granted reservations and the accounting
+window, and every ``find_fit`` passes an ``accept(t, mask)`` gate down to
+``find_slot_select``. The gate popcounts the tenant's occupancy mini-timeline
+against the candidate interval — O(overlapping slots) big-int bit-ops per
+probe, zero DB traffic.
+
+Completeness note: the sweep only re-tests ``accept`` at Gantt slot
+boundaries. That is sufficient because every quota-timeline boundary comes
+from a job interval that also occupies the Gantt (running jobs, granted
+reservations, same-pass commits), so the verdict can only change at instants
+the sweep already visits. The resource-hours counter has no time axis at all
+— within a pass it only grows — so a failure at one probe time fails at
+every later probe time too.
+"""
+
+from __future__ import annotations
+
+from bisect import bisect_right
+
+__all__ = ["QuotaEngine", "QuotaRule", "tenant_of", "RHOURS_WINDOW"]
+
+# sliding window (seconds) over which maxResourceHours is judged; the
+# accounting rollup (repro.core.accounting) buckets consumption so the
+# per-pass seed is one aggregate query over this horizon
+RHOURS_WINDOW = 24 * 3600.0
+
+_FIELDS = ("queue", "project", "user", "jobType")
+
+
+def tenant_of(queue: str, project: str, user: str, job_type: str,
+              best_effort: bool = False) -> tuple[str, str, str, str]:
+    """Canonical tenant tuple for a job. Best-effort jobs are judged as the
+    ``'besteffort'`` quota class whatever their stored jobType — the class an
+    administrator actually wants to cap ("all scavenger work at most N")."""
+    return (queue or "", project or "default", user or "",
+            "besteffort" if best_effort else (job_type or "PASSIVE"))
+
+
+class QuotaRule:
+    """One parsed ``quota_rules`` row."""
+
+    __slots__ = ("rid", "specs", "stars", "max_busy", "max_jobs", "max_rhours")
+
+    def __init__(self, row: dict):
+        self.rid = row.get("idQuota", 0)
+        self.specs = tuple(row.get(f) or "*" for f in _FIELDS)
+        # '*' axes contribute the tenant's concrete value to the counter key
+        # (per-distinct-value counters); '/' axes contribute nothing (one
+        # pooled counter); concrete axes select but need no key part either.
+        self.stars = tuple(i for i, s in enumerate(self.specs) if s == "*")
+        self.max_busy = row.get("maxBusyResources", -1)
+        self.max_jobs = row.get("maxRunningJobs", -1)
+        self.max_rhours = row.get("maxResourceHours", -1)
+
+    def applies(self, tenant: tuple) -> bool:
+        return all(s in ("*", "/") or s == tenant[i]
+                   for i, s in enumerate(self.specs))
+
+    def key(self, tenant: tuple) -> tuple:
+        return (self.rid, *(tenant[i] for i in self.stars))
+
+
+class _Timeline:
+    """Occupy-only occupancy timeline for one counter: slot ``i`` covers
+    ``[starts[i], starts[i+1])`` (last slot open-ended) with a busy-resource
+    mask and a running-job count. Mirrors the Gantt's global-boundary shape
+    at a fraction of the size — only this counter's jobs split it."""
+
+    __slots__ = ("starts", "busy", "njobs")
+
+    def __init__(self):
+        self.starts = [0.0]
+        self.busy = [0]
+        self.njobs = [0]
+
+    def _split(self, t: float) -> int:
+        i = bisect_right(self.starts, t) - 1
+        if self.starts[i] != t:
+            i += 1
+            self.starts.insert(i, t)
+            self.busy.insert(i, self.busy[i - 1])
+            self.njobs.insert(i, self.njobs[i - 1])
+        return i
+
+    def ok(self, mask: int, start: float, stop: float,
+           max_busy: int, max_jobs: int) -> bool:
+        """Would adding ``mask`` over [start, stop) keep every overlapped
+        slot within the caps? Resources never double-book in the Gantt, so
+        ``mask`` is disjoint from any concurrent busy mask and the popcount
+        is exact, not an upper bound."""
+        i = max(0, bisect_right(self.starts, start) - 1)
+        n = len(self.starts)
+        while i < n and self.starts[i] < stop:
+            if max_busy >= 0 and (self.busy[i] | mask).bit_count() > max_busy:
+                return False
+            if max_jobs >= 0 and self.njobs[i] >= max_jobs:
+                return False
+            i += 1
+        return True
+
+    def commit(self, mask: int, start: float, stop: float) -> None:
+        lo = self._split(start)
+        hi = self._split(stop)
+        for i in range(lo, hi):
+            self.busy[i] |= mask
+            self.njobs[i] += 1
+
+
+_EMPTY = _Timeline()
+
+
+class QuotaEngine:
+    """Per-pass quota state: built from the ``quota_rules`` table, seeded
+    with current occupancy, then consulted (``check``) and grown (``commit``)
+    as the policies plan the backlog. Occupy-only within a pass — the
+    property the placement-floor memo in ``policies.find_fit`` relies on."""
+
+    def __init__(self, rules):
+        self.rules = [QuotaRule(dict(r)) for r in rules]
+        self._applicable: dict[tuple, list] = {}   # tenant -> [(rule, key)]
+        self._timelines: dict[tuple, _Timeline] = {}
+        self._rhours: dict[tuple, float] = {}      # key -> proc-seconds
+
+    def counters_for(self, tenant: tuple) -> list:
+        hit = self._applicable.get(tenant)
+        if hit is None:
+            hit = self._applicable[tenant] = [
+                (r, r.key(tenant)) for r in self.rules if r.applies(tenant)]
+        return hit
+
+    # ------------------------------------------------------------- planning
+    def check(self, tenant: tuple, mask: int, start: float, stop: float) -> bool:
+        """The ``accept`` gate: may ``tenant`` hold ``mask`` over
+        [start, stop) without breaching any applicable counter?"""
+        need = mask.bit_count()
+        for rule, key in self.counters_for(tenant):
+            if rule.max_rhours >= 0:
+                if (self._rhours.get(key, 0.0) + need * (stop - start)
+                        > rule.max_rhours * 3600.0):
+                    return False
+            if rule.max_busy >= 0 or rule.max_jobs >= 0:
+                tl = self._timelines.get(key, _EMPTY)
+                if not tl.ok(mask, start, stop, rule.max_busy, rule.max_jobs):
+                    return False
+        return True
+
+    def commit(self, tenant: tuple, mask: int, start: float, stop: float) -> None:
+        """Record a placement (or a running job / granted reservation during
+        seeding) against every applicable counter."""
+        for rule, key in self.counters_for(tenant):
+            if rule.max_busy >= 0 or rule.max_jobs >= 0:
+                tl = self._timelines.get(key)
+                if tl is None:
+                    tl = self._timelines[key] = _Timeline()
+                tl.commit(mask, start, stop)
+            if rule.max_rhours >= 0:
+                self._rhours[key] = (self._rhours.get(key, 0.0)
+                                     + mask.bit_count() * (stop - start))
+
+    def add_consumed(self, tenant: tuple, proc_seconds: float) -> None:
+        """Seed already-consumed window usage (accounting rollup, elapsed
+        part of running jobs) into the resource-hours counters."""
+        if proc_seconds <= 0:
+            return
+        for rule, key in self.counters_for(tenant):
+            if rule.max_rhours >= 0:
+                self._rhours[key] = self._rhours.get(key, 0.0) + proc_seconds
+
+    # ------------------------------------------------- structural screening
+    def busy_cap(self, tenant: tuple) -> int | None:
+        """Tightest instantaneous resource cap over ``tenant`` (None when
+        uncapped): a job needing more can never run, whatever the schedule —
+        the meta-scheduler errors it out instead of planning it forever."""
+        caps = [r.max_busy for r, _ in self.counters_for(tenant)
+                if r.max_busy >= 0]
+        return min(caps) if caps else None
+
+    def jobs_banned(self, tenant: tuple) -> bool:
+        """True when some applicable rule caps running jobs at zero."""
+        return any(r.max_jobs == 0 for r, _ in self.counters_for(tenant))

@@ -23,6 +23,8 @@ CREATE TABLE IF NOT EXISTS jobs (
     reservation         TEXT NOT NULL DEFAULT 'None',     -- None | toSchedule | Scheduled
     message             TEXT DEFAULT '',
     user                TEXT NOT NULL DEFAULT '',
+    project             TEXT NOT NULL DEFAULT 'default',  -- fairness tenant
+
     nbNodes             INTEGER NOT NULL DEFAULT 1,
     weight              INTEGER NOT NULL DEFAULT 1,       -- procs (chips) per node
     command             TEXT NOT NULL DEFAULT '',         -- JSON job spec or shell cmd
@@ -107,7 +109,39 @@ CREATE TABLE IF NOT EXISTS event_log (
 )
 """
 
-ALL_TABLES = [JOBS, RESOURCES, ASSIGNMENTS, QUEUES, ADMISSION_RULES, GANTT, EVENT_LOG]
+# Fairness tier (core/quotas.py): one row per rule. Each selector field is a
+# literal value, '*' (one counter per distinct value) or '/' (one counter
+# shared by all values — a pool). A limit of -1 means unlimited.
+QUOTA_RULES = """
+CREATE TABLE IF NOT EXISTS quota_rules (
+    idQuota          INTEGER PRIMARY KEY AUTOINCREMENT,
+    queue            TEXT NOT NULL DEFAULT '/',
+    project          TEXT NOT NULL DEFAULT '/',
+    user             TEXT NOT NULL DEFAULT '/',
+    jobType          TEXT NOT NULL DEFAULT '/',
+    maxBusyResources INTEGER NOT NULL DEFAULT -1,
+    maxRunningJobs   INTEGER NOT NULL DEFAULT -1,
+    maxResourceHours REAL NOT NULL DEFAULT -1
+)
+"""
+
+# Fairness tier (core/accounting.py): windowed resource consumption, rolled
+# up O(changed) by the jobstate observer when a job leaves Running — the
+# karma fair-share factor and resource-hour quotas read it back by window.
+ACCOUNTING = """
+CREATE TABLE IF NOT EXISTS accounting (
+    windowStart REAL NOT NULL,                    -- bucket start (aligned)
+    user        TEXT NOT NULL,
+    project     TEXT NOT NULL,
+    queueName   TEXT NOT NULL,
+    jobType     TEXT NOT NULL DEFAULT 'PASSIVE',
+    consumed    REAL NOT NULL DEFAULT 0,          -- resource-seconds
+    PRIMARY KEY (windowStart, user, project, queueName, jobType)
+)
+"""
+
+ALL_TABLES = [JOBS, RESOURCES, ASSIGNMENTS, QUEUES, ADMISSION_RULES, GANTT,
+              EVENT_LOG, QUOTA_RULES, ACCOUNTING]
 
 ALL_INDEXES = [
     "CREATE INDEX IF NOT EXISTS idx_jobs_state ON jobs(state)",
@@ -134,7 +168,17 @@ ALL_INDEXES = [
 JOBS_MIGRATIONS = [
     ("resourceRequest", "ALTER TABLE jobs ADD COLUMN resourceRequest TEXT"),
     ("deadline", "ALTER TABLE jobs ADD COLUMN deadline REAL"),
+    ("project", "ALTER TABLE jobs ADD COLUMN project TEXT "
+                "NOT NULL DEFAULT 'default'"),
 ]
+
+# A store that predates a column also predates the default admission rules
+# that touch it — installed on migration (by exact text, see apply_migrations)
+MIGRATION_RULES = {
+    "resourceRequest": (11,),
+    "deadline": (12,),
+    "project": (3, 21),
+}
 
 QUEUES_MIGRATIONS = [
     ("moldable", "ALTER TABLE queues ADD COLUMN moldable TEXT "
@@ -149,6 +193,11 @@ def apply_migrations(db) -> None:
     administrator's edited or deleted copies are never duplicated or
     resurrected — only rules the store has never seen are added). No-op on
     up-to-date stores."""
+    # tables added after the store was created (quota_rules, accounting, …):
+    # every CREATE is IF NOT EXISTS, so this is idempotent and cheap
+    with db.transaction() as cur:
+        for ddl in ALL_TABLES:
+            cur.execute(ddl)
     have_q = {r["name"] for r in db.query("PRAGMA table_info(queues)")}
     missing_q = [ddl for col, ddl in QUEUES_MIGRATIONS if col not in have_q]
     if missing_q:
@@ -162,16 +211,18 @@ def apply_migrations(db) -> None:
             cur.execute("UPDATE admission_rules SET rule=? WHERE rule=?",
                         (new, old))
     have = {r["name"] for r in db.query("PRAGMA table_info(jobs)")}
-    missing = [ddl for col, ddl in JOBS_MIGRATIONS if col not in have]
+    missing = [(col, ddl) for col, ddl in JOBS_MIGRATIONS if col not in have]
     if missing:
         with db.transaction() as cur:
-            for ddl in missing:
+            for _col, ddl in missing:
                 cur.execute(ddl)
-        # a store that predates the typed-request columns also predates the
-        # rules validating them (11: topology caps, 12: reachable deadline)
+        # a store that predates a column also predates the default rules
+        # touching it (11: topology caps, 12: reachable deadline, 3/21:
+        # project default + quota pre-check)
+        wanted = {p for col, _ in missing for p in MIGRATION_RULES.get(col, ())}
         existing = {r["rule"] for r in db.query("SELECT rule FROM admission_rules")}
         new_rules = [(prio, rule) for prio, rule in DEFAULT_ADMISSION_RULES
-                     if prio in (11, 12) and rule not in existing]
+                     if prio in wanted and rule not in existing]
         if new_rules:
             with db.transaction() as cur:
                 cur.executemany(
@@ -187,6 +238,8 @@ DEFAULT_ADMISSION_RULES = [
     (0, "job.setdefault('queueName', 'default')"),
     (1, "job.setdefault('maxTime', 3600.0)"),
     (2, "job.setdefault('nbNodes', 1)\njob.setdefault('weight', 1)"),
+    # every job belongs to a project (the fairness tier's second tenant axis)
+    (3, "if not job.get('project'):\n    job['project'] = 'default'"),
     # "ensure that no user ask for too much resources at once" (§2.1)
     (10, (
         "if job['nbNodes'] * job['weight'] > ctx['total_procs']:\n"
@@ -224,6 +277,43 @@ DEFAULT_ADMISSION_RULES = [
     # §3.3: submitting to the besteffort queue tags the job preemptible —
     # "this property is set by the module that validates incoming jobs"
     (20, "if job['queueName'] == 'besteffort':\n    job['bestEffort'] = 1"),
+    # fairness fast-fail: a job whose SMALLEST alternative still needs more
+    # simultaneous resources than an applicable quota rule will ever allow
+    # its tenant can never be placed — reject at submission instead of
+    # queueing it forever. The floor is the min over alternatives of the
+    # product of level counts (ALL counts as 1 — a lower bound, so the rule
+    # never over-rejects); the scheduler's structural screen re-checks with
+    # the compiled alternatives and the full rule set covers the rest inside
+    # the Gantt sweep. Runs after rule 20 so jobType sees the best-effort
+    # tag.
+    (21, (
+        "_jt = 'besteffort' if job.get('bestEffort') else "
+        "job.get('jobType', 'PASSIVE')\n"
+        "_vals = {'queue': job['queueName'], 'project': job.get('project'),\n"
+        "         'user': job.get('user'), 'jobType': _jt}\n"
+        "_floor = None\n"
+        "for _alt in (job.get('request') or []):\n"
+        "    _n = 1\n"
+        "    for _lvl in _alt.get('levels', []):\n"
+        "        if _lvl.get('count'):\n"
+        "            _n = _n * _lvl['count']\n"
+        "    if _floor is None or _n < _floor:\n"
+        "        _floor = _n\n"
+        "if _floor is None:\n"
+        "    _floor = job.get('nbNodes', 1)\n"
+        "for _r in ctx.get('quota_rules', []):\n"
+        "    if _r['maxBusyResources'] < 0:\n"
+        "        continue\n"
+        "    _applies = True\n"
+        "    for _f in ('queue', 'project', 'user', 'jobType'):\n"
+        "        if _r[_f] not in ('*', '/') and _r[_f] != _vals[_f]:\n"
+        "            _applies = False\n"
+        "    if _applies and _floor > _r['maxBusyResources']:\n"
+        "        raise AdmissionError(\n"
+        "            'job needs at least %d resources at once but quota rule '\n"
+        "            '%d caps the tenant at %d busy' % (_floor, _r['idQuota'],\n"
+        "                                               _r['maxBusyResources']))"
+    )),
     # reservations enter negotiation (fig. 1 'toAckReservation' path)
     (30, "if job.get('reservationStart') is not None:\n    job['reservation'] = 'toSchedule'"),
 ]

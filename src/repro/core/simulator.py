@@ -70,6 +70,8 @@ class JobRecord:
     resources: frozenset = frozenset()   # captured while Running (assignments
                                          # are cleared on termination)
     deadline: float | None = None        # Libra-style completion target
+    user: str = "sim"                    # fairness-tier tenant axes
+    project: str = "default"
 
     @property
     def response(self) -> float | None:
@@ -178,6 +180,7 @@ class ClusterSimulator:
     def submit(self, at: float, *, duration: float, nb_nodes: int = 1,
                weight: int = 1, max_time: float | None = None,
                queue: str | None = None, user: str = "sim",
+               project: str = "default",
                properties: str = "", reservation_start: float | None = None,
                best_effort: bool | None = None, tag: str = "",
                request: str | None = None,
@@ -201,7 +204,8 @@ class ClusterSimulator:
         self._push(at, "submit", {
             "duration": duration, "nb_nodes": nb_nodes, "weight": weight,
             "max_time": max_time if max_time is not None else duration * 1.25 + 1.0,
-            "queue": queue, "user": user, "properties": properties,
+            "queue": queue, "user": user, "project": project,
+            "properties": properties,
             "reservation_start": reservation_start, "best_effort": best_effort,
             "tag": tag, "request": request, "deadline": deadline})
 
@@ -308,7 +312,8 @@ class ClusterSimulator:
             jid = api.oarsub(
                 self.db, json.dumps({"kind": "sim", "duration": p["duration"],
                                      "tag": p["tag"]}),
-                user=p["user"], queue=p["queue"], nb_nodes=p["nb_nodes"],
+                user=p["user"], project=p["project"],
+                queue=p["queue"], nb_nodes=p["nb_nodes"],
                 weight=p["weight"], max_time=p["max_time"],
                 properties=p["properties"], request=p.get("request"),
                 reservation_start=p["reservation_start"],
@@ -339,7 +344,8 @@ class ClusterSimulator:
                 if p.get("deadline") is not None else None
         self.records[jid] = JobRecord(jid, self.now, p["duration"], procs,
                                       state=jobstate.WAITING,
-                                      deadline=deadline)
+                                      deadline=deadline, user=p["user"],
+                                      project=p["project"])
 
     def _on_complete(self, payload: tuple[int, bool, str]) -> None:
         jid, ok, msg = payload
@@ -376,8 +382,8 @@ class ClusterSimulator:
                 continue
             self._completion_scheduled.add(jid)
             r = self.db.query_one(
-                "SELECT startTime, maxTime, weight, command FROM jobs "
-                "WHERE idJob=? AND state='Running'", (jid,))
+                "SELECT startTime, maxTime, weight, command, user, project "
+                "FROM jobs WHERE idJob=? AND state='Running'", (jid,))
             if r is None:          # cancelled again within the same drain
                 continue
             try:
@@ -389,7 +395,9 @@ class ClusterSimulator:
             else:  # resubmitted best-effort clones
                 self.records[jid] = JobRecord(jid, r["startTime"], duration, 0,
                                               start=r["startTime"],
-                                              state=jobstate.RUNNING)
+                                              state=jobstate.RUNNING,
+                                              user=r["user"],
+                                              project=r["project"])
             self.records[jid].resources = frozenset(
                 row["idResource"] for row in self.db.query(
                     "SELECT idResource FROM assignments WHERE idJob=?", (jid,)))

@@ -1,0 +1,21 @@
+"""Version-tolerant shims over the Pallas TPU API.
+
+JAX renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (the
+guide and recent releases use the new name; 0.4.x only has the old one).
+The kernels target the new spelling and fall back here, so the same source
+runs on both sides of the rename.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["compiler_params"]
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+
+def compiler_params(**kwargs):
+    """Build TPU compiler params under whichever name this JAX exposes."""
+    return _COMPILER_PARAMS_CLS(**kwargs)

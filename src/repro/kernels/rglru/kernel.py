@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 __all__ = ["lru_scan_kernel"]
 
 
@@ -66,7 +68,7 @@ def lru_scan_kernel(a: jax.Array, b: jax.Array, *, chunk: int = 128,
         out_specs=pl.BlockSpec((1, Q, W), lambda i, c: (i, c, 0)),
         out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
         scratch_shapes=[pltpu.VMEM((1, W), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(a, b)

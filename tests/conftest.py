@@ -13,8 +13,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # else is the stdlib-only control plane. `pytest -m "not data_plane"` is the
 # CI gate that must stay green — it cannot be drowned out by the known
 # data-plane failures on the reference container.
-DATA_PLANE_MODULES = {"test_kernels", "test_arch_smoke", "test_train_serve",
-                      "test_sharding_rules"}
+DATA_PLANE_MODULES = {"test_kernels", "test_kernels_smoke", "test_arch_smoke",
+                      "test_train_serve", "test_sharding_rules"}
 
 
 def pytest_collection_modifyitems(items):

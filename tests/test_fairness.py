@@ -1,0 +1,313 @@
+"""Fairness tier: quota, karma and multifactor-priority tests.
+
+The quota invariant is verified *independently*: the checker below replays
+finished simulator runs with plain interval arithmetic over the records —
+no Gantt, no bitmasks, no QuotaEngine — and asserts that no rule's
+instantaneous caps were ever breached, for every counter the rule's
+wildcards induce. The karma/aging properties pin down the monotonicity the
+policy docstring promises, and the differential test locks the degenerate
+case (no rules, no history, equal sizes) to byte-identical fifo_backfill
+schedules.
+"""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import AdmissionError, api, set_quota
+from repro.core.accounting import BUCKET, karma_map, rollup_job
+from repro.core.gantt import Gantt
+from repro.core.policies import (FAIRSHARE_WEIGHTS, JobView, get_policy,
+                                 multifactor_priority)
+from repro.core.quotas import QuotaEngine, QuotaRule, tenant_of
+from repro.core.simulator import ClusterSimulator
+
+USERS = ["alice", "bob", "carl"]
+PROJECTS = ["p1", "p2"]
+
+
+# ---------------------------------------------------------------- the oracle
+def _check_rule_never_exceeded(db, records, rule_row):
+    """Independent replay: group finished jobs into the rule's counters and
+    sweep their [start, stop) intervals; every counter must respect the
+    caps at every instant."""
+    rule = QuotaRule(rule_row)
+    groups: dict[tuple, list] = {}
+    for rec in records.values():
+        if rec.start is None or not rec.resources:
+            continue
+        row = db.query_one(
+            "SELECT queueName, project, user, jobType, bestEffort, stopTime "
+            "FROM jobs WHERE idJob=?", (rec.idJob,))
+        tenant = tenant_of(row["queueName"], row["project"], row["user"],
+                           row["jobType"], bool(row["bestEffort"]))
+        if not rule.applies(tenant):
+            continue
+        stop = row["stopTime"] if row["stopTime"] is not None \
+            else rec.start + rec.duration
+        groups.setdefault(rule.key(tenant), []).append(
+            (rec.start, stop, len(rec.resources)))
+    for key, jobs in groups.items():
+        events = []
+        for start, stop, nres in jobs:
+            events.append((start, 1, nres))
+            events.append((stop, -1, nres))
+        events.sort(key=lambda e: (e[0], e[1]))   # stop before start at ties
+        busy = njobs = 0
+        for _t, delta, nres in events:
+            busy += delta * nres
+            njobs += delta
+            if rule.max_busy >= 0:
+                assert busy <= rule.max_busy, (key, busy, rule.max_busy)
+            if rule.max_jobs >= 0:
+                assert njobs <= rule.max_jobs, (key, njobs, rule.max_jobs)
+
+
+quota_rules = st.lists(
+    st.tuples(st.sampled_from(["*", "/", "alice"]),       # user selector
+              st.sampled_from(["*", "/"]),                # project selector
+              st.integers(1, 4),                          # maxBusyResources
+              st.sampled_from([-1, 1, 2])),               # maxRunningJobs
+    min_size=1, max_size=3)
+
+workload = st.lists(
+    st.tuples(st.sampled_from(USERS), st.sampled_from(PROJECTS),
+              st.integers(1, 3),                          # nb_nodes
+              st.floats(10.0, 120.0),                     # duration
+              st.floats(0.0, 200.0)),                     # submit time
+    min_size=3, max_size=8)
+
+
+@settings(max_examples=15, deadline=None)
+@given(quota_rules, workload)
+def test_no_instant_exceeds_any_quota_rule(rules, jobs):
+    """Property: whatever rules are declared, the replayed schedule never
+    holds more busy resources or running jobs than any rule's counter
+    allows — and admission/structural screening is the only way a job is
+    refused (everything else eventually runs)."""
+    sim = ClusterSimulator(n_nodes=6, weight=1)
+    for user, project, busy, njobs in rules:
+        set_quota(sim.db, user=user, project=project,
+                  max_busy_resources=busy, max_running_jobs=njobs)
+    for user, project, nodes, duration, at in jobs:
+        sim.submit(at, duration=duration, user=user, project=project,
+                   nb_nodes=nodes)
+    sim.run(until=5000.0)
+    for rule_row in sim.db.query("SELECT * FROM quota_rules"):
+        _check_rule_never_exceeded(sim.db, sim.records, dict(rule_row))
+    # no famine: every admitted job reached a final state (hopeless ones
+    # were bounced by rule 21 and never entered the jobs table), and the
+    # only Error verdicts come from the quota screening
+    for r in sim.db.query("SELECT state, message FROM jobs"):
+        assert r["state"] in ("Terminated", "Error")
+        if r["state"] == "Error":
+            assert "quota" in (r["message"] or "")
+
+
+def test_quota_defers_overflow_and_leaves_others_alone():
+    """Deterministic anchor for the property: a per-user cap of 2 makes a
+    4-job user run in two waves while a second user is untouched."""
+    sim = ClusterSimulator(n_nodes=4, weight=1)
+    set_quota(sim.db, user="*", max_busy_resources=2)
+    for _ in range(4):
+        sim.submit(0.0, duration=100.0, user="alice")
+    for _ in range(2):
+        sim.submit(0.0, duration=100.0, user="bob")
+    sim.run(until=1000.0)
+    starts = {u: sorted(r.start for r in sim.records.values() if r.user == u)
+              for u in ("alice", "bob")}
+    assert starts["alice"] == [0.0, 0.0, 100.0, 100.0]
+    assert starts["bob"] == [0.0, 0.0]
+
+
+def test_resource_hours_pool_blocks_third_job():
+    """A pooled project resource-hours budget defers the job that would
+    overrun the window until enough of the plan turns into (smaller)
+    actual consumption."""
+    sim = ClusterSimulator(n_nodes=4, weight=1)
+    set_quota(sim.db, project="p", max_resource_hours=1.0)   # 3600 proc-s
+    for user in ("a", "b", "c"):   # maxTime = 1251 each; 3 x 1251 > 3600
+        sim.submit(0.0, duration=1000.0, user=user, project="p")
+    sim.run(until=10000.0)
+    starts = sorted(r.start for r in sim.records.values())
+    assert starts[:2] == [0.0, 0.0]
+    assert starts[2] >= 1000.0
+    assert all(r.state == "Terminated" for r in sim.records.values())
+
+
+def test_structural_screen_errors_hopeless_jobs():
+    """Hopeless jobs die loudly instead of waiting forever: at submission
+    when a rule already bars them (admission rule 21, flat and typed
+    shapes alike), or on the next pass when the rule arrives *after* the
+    job is queued (the scheduler's structural screen)."""
+    sim = ClusterSimulator(n_nodes=8, weight=1)
+    set_quota(sim.db, user="*", max_busy_resources=2)
+    with pytest.raises(AdmissionError):
+        api.oarsub(sim.db, "x", user="carl", nb_nodes=5)
+    with pytest.raises(AdmissionError):
+        api.oarsub(sim.db, "x", user="carl", request="/switch=1/host=3")
+    # a moldable request with one feasible alternative is admitted and runs
+    jid = api.oarsub(sim.db, {"kind": "sim", "duration": 10.0, "tag": ""},
+                     user="carl", request="/host=5 | /host=2",
+                     clock=lambda: sim.now)
+    sim.run(until=100.0)
+    assert sim.db.scalar("SELECT state FROM jobs WHERE idJob=?",
+                         (jid,)) == "Terminated"
+    # rule declared after submission: the scheduler screens the backlog
+    jid2 = api.oarsub(sim.db, "x", user="dora", nb_nodes=2,
+                      clock=lambda: sim.now)
+    set_quota(sim.db, user="dora", max_busy_resources=1)
+    sim.run(until=200.0)
+    row = sim.db.query_one("SELECT state, message FROM jobs WHERE idJob=?",
+                           (jid2,))
+    assert row["state"] == "Error" and "quota" in row["message"]
+
+
+# ------------------------------------------------------------------ accounting
+def test_rollup_matches_actual_consumption():
+    """SUM(accounting.consumed) equals Σ procs × elapsed over finished
+    jobs, split across hour buckets — the observer never loses or double
+    counts a proc-second."""
+    sim = ClusterSimulator(n_nodes=4, weight=1)
+    sim.submit(0.0, duration=1800.0, user="alice", nb_nodes=2)
+    sim.submit(0.0, duration=5000.0, user="bob")
+    sim.submit(100.0, duration=300.0, user="carl")
+    sim.run(until=20000.0)
+    expected = sum(len(r.resources) * (r.stop - r.start)
+                   for r in sim.records.values() if r.state == "Terminated")
+    total = sim.db.scalar("SELECT SUM(consumed) FROM accounting")
+    assert total == pytest.approx(expected)
+    # bob's 5000 s span at least two buckets
+    assert sim.db.scalar(
+        "SELECT COUNT(*) FROM accounting WHERE user='bob'") >= 2
+    # per-bucket rows never exceed one bucket of the whole cluster
+    for r in sim.db.query("SELECT consumed FROM accounting"):
+        assert 0 < r["consumed"] <= 4 * BUCKET
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.floats(100.0, 50000.0), st.floats(100.0, 50000.0),
+       st.floats(100.0, 100000.0))
+def test_karma_monotone_in_own_consumption(base, other, extra):
+    """Property: karma strictly favours the lighter consumer, and adding
+    consumption to a tenant never lowers its own karma (monotonicity)."""
+    from repro.core import connect
+
+    def karma_with(alice_consumed):
+        db = connect()
+        with db.transaction() as cur:
+            for user, c in (("alice", alice_consumed), ("bob", other)):
+                cur.execute(
+                    "INSERT INTO accounting(windowStart, user, project, "
+                    "queueName, jobType, consumed) VALUES (0,?,?,?,?,?)",
+                    (user, "p", "default", "PASSIVE", c))
+        return karma_map(db, BUCKET)
+
+    k0 = karma_with(base)
+    k1 = karma_with(base + extra)
+    assert k1[("alice", "p")] > k0[("alice", "p")] - 1e-12
+    heavier, lighter = (("alice", "p"), ("bob", "p")) if base > other \
+        else (("bob", "p"), ("alice", "p"))
+    if base != other:
+        assert k0[heavier] > k0[lighter]
+
+
+def test_karma_empty_window_is_uniform_zero():
+    from repro.core import connect
+    assert karma_map(connect(), 0.0) == {}
+
+
+def test_observer_rolls_up_on_preemption_error_path():
+    """Running → toError (preemption / cancellation) charges the tenant
+    too — scavenger usage is not free."""
+    sim = ClusterSimulator(n_nodes=2, weight=1)
+    sim.submit(0.0, duration=10000.0, user="alice", best_effort=True)
+    sim.submit(50.0, duration=100.0, user="bob", nb_nodes=2)  # preempts
+    sim.run(until=1000.0)
+    row = sim.db.query_one(
+        "SELECT SUM(consumed) AS c FROM accounting WHERE user='alice' "
+        "AND jobType='besteffort'")
+    assert row["c"] and row["c"] > 0
+
+
+# ------------------------------------------------- multifactor priority / aging
+def test_aging_overcomes_any_karma_gap():
+    """The age term is unbounded while karma is bounded by the share
+    weights, so a maximally-punished tenant's job eventually outranks a
+    fresh zero-karma job of the same size — delayed, never starved."""
+    worst_gap = FAIRSHARE_WEIGHTS["karma"] * 1.0   # karma lives in (-1, 1)
+    horizon = worst_gap / FAIRSHARE_WEIGHTS["age"] + 1.0
+    old_heavy = multifactor_priority(karma=0.5, age=horizon, size=0.25)
+    fresh_light = multifactor_priority(karma=-0.5, age=0.0, size=0.25)
+    assert old_heavy > fresh_light
+
+
+def test_fairshare_orders_low_karma_first_under_contention():
+    """End to end: after alice monopolises the window, a simultaneous
+    alice/bob submission pair is served bob-first."""
+    sim = ClusterSimulator(n_nodes=1, weight=1, policy="fairshare")
+    sim.submit(0.0, duration=500.0, user="alice")
+    sim.submit(600.0, duration=100.0, user="alice")
+    sim.submit(600.0, duration=100.0, user="bob")
+    sim.run(until=5000.0)
+    alice2 = [r for r in sim.records.values()
+              if r.user == "alice" and r.submit == 600.0][0]
+    bob = [r for r in sim.records.values() if r.user == "bob"][0]
+    assert bob.start < alice2.start
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 4), st.floats(5.0, 300.0)),
+                min_size=1, max_size=10))
+def test_fairshare_degenerates_to_fifo_without_history(shapes):
+    """Differential: no accounting history (karma 0 everywhere), one queue,
+    equal-size jobs ⇒ fairshare's schedule is byte-identical to
+    fifo_backfill's."""
+    res = frozenset(range(1, 7))
+    nodes = shapes[0][0]
+    jobs = [JobView(idJob=i + 1, nbNodes=nodes, weight=1, maxTime=t,
+                    submissionTime=0.0, candidates=set(res))
+            for i, (_n, t) in enumerate(shapes)]
+    fair = {(p.idJob, p.start, frozenset(p.resources))
+            for p in get_policy("fairshare")(Gantt(set(res), 0.0), jobs, 0.0)}
+    fifo = {(p.idJob, p.start, frozenset(p.resources))
+            for p in get_policy("fifo_backfill")(Gantt(set(res), 0.0), jobs, 0.0)}
+    assert fair == fifo
+
+
+# ----------------------------------------------------------------- engine unit
+def test_quota_engine_wildcard_vs_pool_counters():
+    """'*' gives each user its own counter; '/' pools them."""
+    per_user = QuotaEngine([{"idQuota": 1, "queue": "/", "project": "/",
+                             "user": "*", "jobType": "/",
+                             "maxBusyResources": 2, "maxRunningJobs": -1,
+                             "maxResourceHours": -1}])
+    pooled = QuotaEngine([{"idQuota": 1, "queue": "/", "project": "/",
+                           "user": "/", "jobType": "/",
+                           "maxBusyResources": 2, "maxRunningJobs": -1,
+                           "maxResourceHours": -1}])
+    ta = tenant_of("default", "p", "alice", "PASSIVE")
+    tb = tenant_of("default", "p", "bob", "PASSIVE")
+    for eng in (per_user, pooled):
+        assert eng.check(ta, 0b11, 0.0, 10.0)
+        eng.commit(ta, 0b11, 0.0, 10.0)
+        assert not eng.check(ta, 0b100, 5.0, 15.0)   # alice at her cap
+        assert eng.check(ta, 0b100, 10.0, 20.0)      # after she frees up
+    assert per_user.check(tb, 0b1100, 0.0, 10.0)     # own counter: free
+    assert not pooled.check(tb, 0b100, 0.0, 10.0)    # shared pool: full
+
+
+def test_set_quota_validates_limits():
+    from repro.core import connect, drop_quota, list_quotas
+    db = connect()
+    with pytest.raises(ValueError):
+        set_quota(db, max_busy_resources=-2)
+    with pytest.raises(ValueError):
+        set_quota(db, max_resource_hours=-0.5)
+    rid = set_quota(db, user="alice", max_busy_resources=3)
+    assert [q["user"] for q in list_quotas(db)] == ["alice"]
+    drop_quota(db, rid)
+    assert list_quotas(db) == []
+    with pytest.raises(KeyError):
+        drop_quota(db, rid)
