@@ -54,7 +54,7 @@ def run_burst(n_jobs: int, *, n_nodes: int = 17, weight: int = 2,
                             scheduler=MetaScheduler(db),
                             periods={"scheduler": 0.5, "launcher": 0.5,
                                      "monitor": 3600, "cancel": 3600,
-                                     "resubmit": 3600})
+                                     "resubmit": 3600, "reaper": 3600})
     q0 = db.query_count
     t0 = time.perf_counter()
     for _ in range(n_jobs):

@@ -1,0 +1,267 @@
+"""Beyond-paper: the failure-recovery tier under injected chaos.
+
+The paper's robustness claim (§2) is architectural: all state lives in the
+DB, so modules can die and restart. This suite *measures* the claim instead
+of assuming it. Two legs, recorded as the ``chaos`` section of
+``BENCH_sched.json`` (``chaos_smoke`` for CI):
+
+* **paired chaos run** — the identical seeded workload (run_trace's mix at
+  ~80% offered load) runs twice: once failure-free, once under a seeded
+  :func:`make_chaos_trace` (Poisson node failures with switch blast radius,
+  two flapping hosts, a scheduler crash and a launcher crash mid-pass).
+  Acceptance: every job decided (Terminated, or Error only with its retry
+  budget exhausted), zero orphans left in toLaunch/Launching, and goodput —
+  useful node-seconds over makespan — at ≥ 0.85× the failure-free run.
+  MTTR (job kill → retry clone start) and the retry success rate ride
+  along.
+
+* **health-gated headline pass** — one full meta-scheduler pass at the
+  frozen-baseline size (10k nodes, 500-job backlog) with the health tier
+  live: every resource carries a health row, a slice of the cluster is
+  Suspected (mid-probation) and a few flappers are quarantined Dead. The
+  pass must keep the ≥5× wall / ≥10× SQL margins vs the seed baseline —
+  the fault-tolerance tier is not allowed to tax the fast path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+import sys
+import time
+from dataclasses import dataclass
+
+from benchmarks import record
+from repro.core import MetaScheduler, api, connect
+from repro.core.simulator import ClusterSimulator, make_chaos_trace
+
+# mean procs-seconds per job of the run_trace mix: E[duration]=600,
+# E[hosts]=3 — used to size batches to ~80% offered load
+_MEAN_WORK = 600.0 * 3.0
+_MIX_DURATIONS = (300.0, 600.0, 900.0)
+_MIX_HOSTS = (1, 1, 2, 2, 4, 8)
+
+
+@dataclass
+class ChaosRunResult:
+    nodes: int
+    jobs: int
+    seed: int
+    chaos: bool
+    wall_s: float
+    makespan_s: float
+    terminated: int
+    errors_budget_exhausted: int
+    undecided: int
+    orphans: int
+    restarts: int
+    node_failures: int
+    quarantined: int
+    retries: int
+    retry_success_rate: float
+    mttr_s: float
+    goodput: float            # useful procs (work delivered / makespan)
+
+
+@dataclass
+class HealthPassResult:
+    nodes: int
+    backlog: int
+    suspected: int
+    dead: int
+    schedule_pass_s: float
+    sql_per_pass: float
+
+
+def _build_sim(n_nodes: int) -> ClusterSimulator:
+    # 32-host switches so the blast-radius case is a rack, not the cluster;
+    # scheduler_period is a 5-virtual-minute robustness floor (the run is
+    # event-driven; the floor only matters if chaos eats a notification)
+    return ClusterSimulator(
+        n_nodes=n_nodes, weight=1, pods=max(1, n_nodes // 64),
+        switches_per_pod=2, scheduler_period=300.0)
+
+
+def _submit_mix(sim: ClusterSimulator, *, n_jobs: int, batch: int,
+                interval: float, seed: int) -> None:
+    rng = random.Random(seed)
+    t, submitted = 0.0, 0
+    while submitted < n_jobs:
+        for _ in range(min(batch, n_jobs - submitted)):
+            d = rng.choice(_MIX_DURATIONS)
+            sim.submit(t, duration=d, nb_nodes=rng.choice(_MIX_HOSTS),
+                       max_time=d)
+            submitted += 1
+        t += interval
+
+
+def _mttr_and_retries(db) -> tuple[float, int, float]:
+    """Mean kill→restart latency over retry clones, from the store alone.
+
+    Clones are the rows with ``retries > 0`` (a structural marker — the
+    message is overwritten at completion); lineage comes from the recovery
+    event log ("resubmitted as job N"), attached to the *ancestor*, whose
+    ``stopTime`` is the kill instant."""
+    clones = {r["idJob"]: r for r in db.query(
+        "SELECT idJob, startTime, state FROM jobs WHERE retries > 0")}
+    done = sum(1 for c in clones.values() if c["state"] == "Terminated")
+    gaps = []
+    for ev in db.query(
+            "SELECT e.job_id, e.message, a.stopTime FROM event_log e "
+            "JOIN jobs a ON a.idJob = e.job_id WHERE e.module='recovery' "
+            "AND e.message LIKE 'resubmitted as job %'"):
+        clone = clones.get(int(ev["message"].split("as job ")[1].split()[0]))
+        if clone and clone["startTime"] is not None \
+                and ev["stopTime"] is not None:
+            gaps.append(clone["startTime"] - ev["stopTime"])
+    mttr = sum(gaps) / len(gaps) if gaps else 0.0
+    rate = done / len(clones) if clones else 1.0
+    return mttr, len(clones), rate
+
+
+def run_chaos(n_jobs: int, n_nodes: int, *, seed: int = 0,
+              chaos: bool = True, interval: float = 200.0) -> ChaosRunResult:
+    """One simulator run of the seeded mix, with or without the fault trace.
+
+    The paired call with ``chaos=False`` on the same seed is the goodput
+    baseline — identical workload, identical submission instants.
+    """
+    sim = _build_sim(n_nodes)
+    batch = max(1, round(0.8 * n_nodes * interval / _MEAN_WORK))
+    _submit_mix(sim, n_jobs=n_jobs, batch=batch, interval=interval, seed=seed)
+    horizon = (n_jobs / batch) * interval * 1.2
+    failures = 0
+    if chaos:
+        # ~1 failure per ~17 node-lifetimes over the run, plus two flappers
+        # cycling faster than the probation window (150 s period vs the
+        # 2-sweep × 60 s monitor cadence) and one crash each for the
+        # scheduler (mid-pass, 3 jobs marked) and the launcher (mid-pass,
+        # 2 jobs launching) — both leave orphans for the reaper
+        trace = make_chaos_trace(
+            sim.topology(), seed=seed, horizon=horizon,
+            node_mtbf=n_nodes * horizon / 30.0, mttr=600.0,
+            correlated_p=0.1, flappers=2, flap_period=150.0,
+            crashes=((round(horizon * 0.3, 3), "scheduler", 3),
+                     (round(horizon * 0.6, 3), "launcher", 2)))
+        failures = sum(1 for e in trace.events if e.kind == "fail")
+        sim.inject_chaos(trace)
+    t0 = time.perf_counter()
+    records = sim.run()
+    wall = time.perf_counter() - t0
+    states = {r["state"]: r["c"] for r in sim.db.query(
+        "SELECT state, COUNT(*) AS c FROM jobs GROUP BY state")}
+    orphans = states.get("toLaunch", 0) + states.get("Launching", 0)
+    undecided = sum(c for s, c in states.items()
+                    if s not in ("Terminated", "Error"))
+    exhausted = sim.db.scalar(
+        "SELECT COUNT(*) FROM jobs WHERE state='Error' "
+        "AND retries >= maxRetries") or 0
+    quarantined = sim.db.scalar(
+        "SELECT COUNT(*) FROM resources WHERE state='Dead'") or 0
+    mttr, retries, retry_rate = _mttr_and_retries(sim.db)
+    # makespan = last job completion, not sim.now: the fault trace queues
+    # fail/revive events up to its horizon, which can trail the workload by
+    # thousands of empty virtual seconds
+    makespan = max((r.stop for r in records if r.stop is not None),
+                   default=sim.now)
+    goodput = sum(r.duration * r.procs for r in records
+                  if r.state == "Terminated") / makespan if makespan else 0.0
+    return ChaosRunResult(
+        nodes=n_nodes, jobs=n_jobs, seed=seed, chaos=chaos,
+        wall_s=round(wall, 3), makespan_s=round(makespan, 1),
+        terminated=states.get("Terminated", 0),
+        errors_budget_exhausted=exhausted, undecided=undecided,
+        orphans=orphans, restarts=sim.restarts, node_failures=failures,
+        quarantined=quarantined, retries=retries,
+        retry_success_rate=round(retry_rate, 4), mttr_s=round(mttr, 2),
+        goodput=round(goodput, 2))
+
+
+def run_health_gated_pass(n_nodes: int = 10_000, backlog: int = 500, *,
+                          seed: int = 0) -> HealthPassResult:
+    """One full meta-scheduler pass at the frozen-baseline shape with the
+    health tier populated: a health row per resource, ~2% of the cluster
+    Suspected mid-probation, a handful quarantined Dead. The margins vs the
+    seed baseline must hold — fault tolerance must not tax the fast path."""
+    db = connect()
+    pods = max(1, n_nodes // 256)
+    for p in range(pods):
+        count = n_nodes // pods + (1 if p < n_nodes % pods else 0)
+        api.add_resources(db, [f"p{p}-h{i}" for i in range(count)],
+                          weight=4, pod=p, switch=f"sw{p}")
+    rng = random.Random(seed)
+    ids = [r["idResource"] for r in db.query(
+        "SELECT idResource FROM resources")]
+    suspected = rng.sample(ids, max(1, len(ids) // 50))
+    dead = suspected[: max(1, len(suspected) // 10)]
+    suspected = suspected[len(dead):]
+    with db.transaction() as cur:
+        cur.executemany("UPDATE resources SET state='Suspected' "
+                        "WHERE idResource=?", [(i,) for i in suspected])
+        cur.executemany("UPDATE resources SET state='Dead' "
+                        "WHERE idResource=?", [(i,) for i in dead])
+    for i in ids:   # every resource carries live health telemetry
+        db.execute_quiet(
+            "INSERT INTO resource_health(idResource, health, probation,"
+            " flaps, lastChange) VALUES (?,?,?,?,0)",
+            (i, 0.66 if i in set(suspected) else 1.0,
+             1 if i in set(suspected) else 0, 1 if i in set(dead) else 0))
+    now = 1000.0
+    for _ in range(backlog):
+        api.oarsub(db, "work",
+                   nb_nodes=rng.choice([1, 2, 4, 8, 16, 64, 256]),
+                   max_time=rng.uniform(600, 86400), clock=lambda: now)
+    sched = MetaScheduler(db, clock=lambda: now)
+    q0 = db.query_count
+    t0 = time.perf_counter()
+    sched.run()
+    t_pass = time.perf_counter() - t0
+    sql = db.query_count - q0
+    db.close()
+    return HealthPassResult(n_nodes, backlog, len(suspected), len(dead),
+                            round(t_pass, 4), float(sql))
+
+
+def main(smoke: bool = False) -> dict:
+    if smoke:
+        n_jobs, n_nodes = 1200, 128
+        hp_nodes, hp_backlog = 1000, 200
+    else:
+        n_jobs, n_nodes = 20_000, 512
+        hp_nodes, hp_backlog = 10_000, 500
+    print(f"paired run: {n_jobs} jobs on {n_nodes} nodes (~80% load)")
+    ff = run_chaos(n_jobs, n_nodes, chaos=False)
+    print(f"  failure-free: makespan={ff.makespan_s:.0f}s "
+          f"goodput={ff.goodput:.1f} wall={ff.wall_s:.1f}s")
+    ch = run_chaos(n_jobs, n_nodes, chaos=True)
+    ratio = ch.goodput / ff.goodput if ff.goodput else 0.0
+    print(f"  chaos: makespan={ch.makespan_s:.0f}s goodput={ch.goodput:.1f} "
+          f"({ratio:.3f}x ff) failures={ch.node_failures} "
+          f"restarts={ch.restarts} retries={ch.retries} "
+          f"(success {ch.retry_success_rate:.0%}) mttr={ch.mttr_s:.0f}s "
+          f"quarantined={ch.quarantined} orphans={ch.orphans} "
+          f"undecided={ch.undecided} wall={ch.wall_s:.1f}s")
+    hp = run_health_gated_pass(hp_nodes, hp_backlog)
+    print(f"health-gated pass: {hp.nodes} nodes / {hp.backlog} backlog "
+          f"({hp.suspected} Suspected, {hp.dead} Dead): "
+          f"{hp.schedule_pass_s:.3f}s, {hp.sql_per_pass:.0f} queries")
+    section = {
+        "failure_free": dataclasses.asdict(ff),
+        "chaos": dataclasses.asdict(ch),
+        "goodput_ratio": round(ratio, 4),
+        "health_pass": dataclasses.asdict(hp),
+    }
+    if not smoke:
+        base = record.SEED_BASELINE
+        section["health_pass_speedup_vs_seed"] = {
+            "pass_wall": round(base["pass_wall_s"] / hp.schedule_pass_s, 2)
+            if hp.schedule_pass_s else None,
+            "sql_per_pass": round(base["sql_per_pass"] / hp.sql_per_pass, 2)
+            if hp.sql_per_pass else None,
+        }
+    record.write_bench_sched(chaos_results=section, smoke=smoke)
+    return section
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv[1:])

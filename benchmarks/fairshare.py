@@ -76,7 +76,7 @@ def run_contention(policy: str, *, n_nodes: int = 32, n_tail: int = 1000,
     sim = ClusterSimulator(n_nodes=n_nodes, weight=1, policy=policy,
                            scheduler_period=1e9,
                            periods={"monitor": 1e9, "cancel": 1e9,
-                                    "resubmit": 1e9})
+                                    "resubmit": 1e9, "reaper": 1e9})
     rng = random.Random(seed)
     for i in range(heavy_jobs):
         sim.submit(rng.uniform(0.0, 10.0), duration=60.0, nb_nodes=2,

@@ -44,6 +44,7 @@ def write_bench_sched(path: str = BENCH_PATH, *, scale_results=None,
                       burst_results=None, hier_results=None,
                       trace_result=None, edf_passes=None, edf_workload=None,
                       fairshare_results=None, quota_pass=None,
+                      chaos_results=None,
                       smoke: bool | None = None) -> dict:
     """Merge suite results into BENCH_sched.json (section per suite, so
     scale, the hierarchical-request variant and burst can each emit
@@ -144,6 +145,15 @@ def write_bench_sched(path: str = BENCH_PATH, *, scale_results=None,
                     if quota_pass.sql_per_pass else None,
                 }
         payload["fairshare_smoke" if smoke else "fairshare"] = section
+    if chaos_results is not None:
+        # the failure-recovery tier: paired failure-free vs chaos runs of
+        # the identical seeded workload, plus the health-gated headline
+        # pass. Acceptance, guarded by the CI smoke check: every job
+        # decided (Terminated or budget-exhausted Error), zero orphans in
+        # toLaunch/Launching after the mid-pass crashes, goodput >= 0.85x
+        # the failure-free run, and the health-gated pass keeps the >=5x
+        # wall / >=10x SQL seed margins.
+        payload["chaos_smoke" if smoke else "chaos"] = chaos_results
     tmp = path + ".tmp"
     with open(tmp, "w") as fh:
         json.dump(payload, fh, indent=2, sort_keys=True)

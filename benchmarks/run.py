@@ -16,6 +16,10 @@ Suites:
   fairshare      beyond-paper — fairness tier: adversarial 1k-user flood
                  (karma fair-share vs the unfair FIFO baseline) and the
                  quota-enabled headline pass vs the frozen seed margins
+  chaos          beyond-paper — failure-recovery tier: the seeded workload
+                 under injected node failures, flapping hosts and mid-pass
+                 crash-restarts vs its failure-free twin, plus the
+                 health-gated headline pass vs the frozen seed margins
 
 The scheduler-perf suites (scale, burst) additionally record their numbers
 in ``BENCH_sched.json`` (pass wall time, SQL queries per pass, speedup vs
@@ -29,10 +33,11 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import burst, complexity, esp2, fairshare, parallel_jobs, scale
+from benchmarks import (burst, chaos, complexity, esp2, fairshare,
+                        parallel_jobs, scale)
 
 SUITES = ["complexity", "features", "esp2", "burst", "parallel_jobs", "scale",
-          "fairshare"]
+          "fairshare", "chaos"]
 
 
 def run_features() -> None:
@@ -84,6 +89,8 @@ def main(argv: list[str] | None = None) -> None:
             scale.main(smoke=smoke)
         elif suite == "fairshare":
             fairshare.main(smoke=smoke)
+        elif suite == "chaos":
+            chaos.main(smoke=smoke)
         print(f"--- {suite} done in {time.perf_counter() - t:.1f}s")
     print(f"\nall suites done in {time.perf_counter() - t0:.1f}s")
 

@@ -180,7 +180,7 @@ def run_trace(n_jobs: int = 100_000, n_nodes: int = 512, *, batch: int = 45,
     # separately (monitor_sweep_* in the scale section)
     sim = ClusterSimulator(n_nodes=n_nodes, weight=1, scheduler_period=1e9,
                            periods={"monitor": 3600.0, "cancel": 3600.0,
-                                    "resubmit": 3600.0})
+                                    "resubmit": 3600.0, "reaper": 3600.0})
     rng = random.Random(seed)
     t, submitted = 0.0, 0
     while submitted < n_jobs:
@@ -212,7 +212,7 @@ def run_edf_workload(policy: str, *, n_nodes: int = 64, n_jobs: int = 150,
     sim = ClusterSimulator(n_nodes=n_nodes, weight=1, policy=policy,
                            scheduler_period=1e9,
                            periods={"monitor": 1e9, "cancel": 1e9,
-                                    "resubmit": 1e9})
+                                    "resubmit": 1e9, "reaper": 1e9})
     rng = random.Random(seed)
     for _ in range(n_jobs):
         at = rng.uniform(0.0, 1000.0)

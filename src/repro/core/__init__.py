@@ -20,7 +20,9 @@ from repro.core.request import (BadRequest, ResourceRequest, parse_request,
 from repro.core.central import CentralModule
 from repro.core.metascheduler import MetaScheduler
 from repro.core.launcher import Executor, TaktukLauncher, SimTransport
-from repro.core.simulator import ClusterSimulator
+from repro.core.simulator import (ClusterSimulator, ChaosEvent, ChaosTrace,
+                                  make_chaos_trace)
+from repro.core.recovery import CrashRestart, RecoveryModule
 
 __all__ = [
     "Database", "connect", "oarsub", "oardel", "oarstat", "oarhold",
@@ -28,6 +30,8 @@ __all__ = [
     "set_quota", "list_quotas", "drop_quota",
     "AdmissionError", "CentralModule", "MetaScheduler", "Executor",
     "TaktukLauncher", "SimTransport", "ClusterSimulator",
+    "ChaosEvent", "ChaosTrace", "make_chaos_trace",
+    "CrashRestart", "RecoveryModule",
     "ClusterClient", "JobRequest", "JobInfo", "NodeInfo",
     "UnknownJob", "InvalidStateTransition",
     "BadRequest", "ResourceRequest", "parse_request", "canonical_request",

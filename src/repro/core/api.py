@@ -82,7 +82,8 @@ def oarsub(db, command: str | dict, *, user: str = "user",
            job_type: str = "PASSIVE", info_type: str = "",
            launching_directory: str = "", best_effort: bool | None = None,
            request: str | ResourceRequest | list[ResourceRequest] | None = None,
-           deadline: float | None = None, clock=None) -> int:
+           deadline: float | None = None, max_retries: int | None = None,
+           clock=None) -> int:
     """Submit a job. Returns its idJob (its index in the jobs table).
 
     Figure 3 flow: fetch admission rules from the DB → rules fill defaults
@@ -125,6 +126,10 @@ def oarsub(db, command: str | dict, *, user: str = "user",
         "request": [a.to_dict() for a in alternatives],
         "deadline": deadline,
     }
+    if max_retries is not None:
+        # per-job retry budget against *system* failures (node death, failed
+        # deploy); None keeps the schema default. 0 disables retries.
+        job["maxRetries"] = int(max_retries)
     if queue is not None:
         job["queueName"] = queue
     if best_effort is not None:
@@ -159,15 +164,17 @@ def oarsub(db, command: str | dict, *, user: str = "user",
             "INSERT INTO jobs(jobType, infoType, user, project, nbNodes, weight,"
             " command, queueName, maxTime, properties, launchingDirectory,"
             " submissionTime, reservation, reservationStart, bestEffort, message,"
-            " resourceRequest, deadline)"
-            " VALUES (?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?)",
+            " resourceRequest, deadline, maxRetries)"
+            " VALUES (?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,"
+            " COALESCE(?, 3))",
             (job["jobType"], job["infoType"], job["user"],
              job.get("project", "default"), job["nbNodes"],
              job["weight"], job["command"], job["queueName"], job["maxTime"],
              job["properties"], job["launchingDirectory"], job["submissionTime"],
              job.get("reservation", "None"), job.get("reservationStart"),
              job.get("bestEffort", 0), "submitted",
-             request_to_json(alternatives), job.get("deadline")))
+             request_to_json(alternatives), job.get("deadline"),
+             job.get("maxRetries")))
         job_id = cur.lastrowid
     db.log_event("oarsub", "info", f"job {job_id} submitted by {user}", job_id)
     db.notify("submission")
@@ -366,6 +373,7 @@ class JobRequest:
     reservation_start: float | None = None
     best_effort: bool | None = None
     job_type: str = "PASSIVE"
+    max_retries: int | None = None   # retry budget vs system failures
 
 
 @dataclass(frozen=True)
@@ -389,6 +397,8 @@ class JobInfo:
     reservation: str
     reservation_start: float | None
     deadline: float | None
+    retries: int
+    max_retries: int
     request: tuple[ResourceRequest, ...] | None
 
     @classmethod
@@ -406,6 +416,7 @@ class JobInfo:
             message=row["message"], reservation=row["reservation"],
             reservation_start=row["reservationStart"],
             deadline=row["deadline"],
+            retries=row["retries"], max_retries=row["maxRetries"],
             request=tuple(request_from_json(raw)) if raw else None)
 
 
@@ -458,6 +469,7 @@ class ClusterClient:
             queue=req.queue, max_time=req.walltime, request=req.request,
             reservation_start=req.reservation_start, job_type=req.job_type,
             best_effort=req.best_effort, deadline=req.deadline,
+            max_retries=req.max_retries,
             **({"clock": self.clock} if self.clock else {}))
         return self.stat(job_id)
 

@@ -36,9 +36,11 @@ def resubmit_preempted(db, *, clock=None) -> list[int]:
         return []
     clones = [
         (job["jobType"], job["infoType"], "Waiting", job["user"],
-         job["nbNodes"], job["weight"], job["command"], job["queueName"],
-         job["maxTime"], job["properties"], job["launchingDirectory"],
-         now, 1, job["checkpointPath"], job["resourceRequest"], job["deadline"],
+         job["project"], job["nbNodes"], job["weight"], job["command"],
+         job["queueName"], job["maxTime"], job["properties"],
+         job["launchingDirectory"], now, 1, job["checkpointPath"],
+         job["resourceRequest"], job["deadline"], job["retries"],
+         job["maxRetries"],
          f"resubmission of preempted job {job['idJob']}")
         for job in rows]
     with db.transaction() as cur:
@@ -46,12 +48,15 @@ def resubmit_preempted(db, *, clock=None) -> list[int]:
         # all clones, one for all ancestor marks. Clone ids are recovered
         # from MAX(idJob): AUTOINCREMENT ids are monotone and the handle's
         # writer lock means nothing else inserts inside this transaction.
+        # The clone carries the full tenant identity (user AND project) —
+        # dropping project let resubmitted best-effort work escape quota and
+        # karma accounting under its tenant.
         cur.executemany(
-            "INSERT INTO jobs(jobType, infoType, state, user, nbNodes, weight,"
-            " command, queueName, maxTime, properties, launchingDirectory,"
-            " submissionTime, bestEffort, checkpointPath, resourceRequest,"
-            " deadline, message)"
-            " VALUES (?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?)", clones)
+            "INSERT INTO jobs(jobType, infoType, state, user, project,"
+            " nbNodes, weight, command, queueName, maxTime, properties,"
+            " launchingDirectory, submissionTime, bestEffort, checkpointPath,"
+            " resourceRequest, deadline, retries, maxRetries, message)"
+            " VALUES (?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?)", clones)
         top = cur.execute("SELECT MAX(idJob) FROM jobs").fetchone()[0]
         new_ids = list(range(top - len(clones) + 1, top + 1))
         # mark the ancestors so we do not clone them twice

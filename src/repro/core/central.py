@@ -24,20 +24,23 @@ from __future__ import annotations
 import time as _time
 from typing import Callable
 
-from repro.core import besteffort
+from repro.core import besteffort, recovery as recovery_mod
 from repro.core.launcher import Executor, TaktukLauncher
 from repro.core.metascheduler import MetaScheduler
 
 __all__ = ["CentralModule"]
 
 # task kinds the automaton knows; notification tags map onto them
-TASKS = ("scheduler", "launcher", "cancel", "monitor", "resubmit")
+TASKS = ("scheduler", "launcher", "cancel", "monitor", "resubmit", "reaper")
 _TAG_TO_TASKS = {
     "submission": ("scheduler",),
     "jobstate": ("launcher",),
     "scheduler": ("scheduler",),
+    "launcher": ("launcher",),
+    "resubmit": ("resubmit",),
     "cancel": ("cancel", "resubmit", "scheduler"),
     "monitor": ("monitor",),
+    "reaper": ("reaper",),
 }
 
 
@@ -51,15 +54,18 @@ class CentralModule:
     def __init__(self, db, *, clock: Callable[[], float] | None = None,
                  scheduler: MetaScheduler | None = None,
                  executor: Executor | None = None,
+                 recovery: "recovery_mod.RecoveryModule | None" = None,
                  periods: dict[str, float] | None = None):
         self.db = db
         self.clock = clock or _time.time
         self.scheduler = scheduler or MetaScheduler(db, clock=self.clock)
         self.executor = executor or Executor(db, clock=self.clock,
                                              launcher=TaktukLauncher())
+        self.recovery = recovery or recovery_mod.RecoveryModule(
+            db, clock=self.clock)
         # periodic redundancy (§2.2): every task re-runs at least this often
         self.periods = {"scheduler": 30.0, "launcher": 5.0, "cancel": 10.0,
-                        "monitor": 60.0, "resubmit": 30.0}
+                        "monitor": 60.0, "resubmit": 30.0, "reaper": 60.0}
         if periods:
             self.periods.update(periods)
         self._pending: set[str] = set(TASKS)   # run everything on first tick
@@ -67,6 +73,14 @@ class CentralModule:
         self._busy = False
         self.stats = {"notifications": 0, "discarded": 0, "passes": 0}
         db.add_notify_hook(self.notify)
+
+    def detach(self) -> None:
+        """Unhook this control plane from the store. A crash-restart rebuild
+        replaces the whole plane against the same Database handle; without
+        detaching, the dead plane's notify hook and the reaper's state
+        observer would keep firing alongside the new one's."""
+        self.db.remove_notify_hook(self.notify)
+        self.recovery.detach()
 
     # --------------------------------------------------------- notifications
     def notify(self, tag: str) -> None:
@@ -96,11 +110,21 @@ class CentralModule:
                 rep = self.executor.monitor_nodes()
                 report["monitor"] = {"failed": rep.failed}
                 self._last_run["monitor"] = now
+            if "reaper" in due:
+                # after monitor (a sweep may just have failed an orphan's
+                # nodes), before resubmit (an orphan it errors out should be
+                # resubmitted in this same tick)
+                report["reaped"] = self.recovery.reap()
+                self._last_run["reaper"] = now
+                due.update(self._pending)   # reap may flag resubmit/launcher
+                self._pending.clear()
             if "cancel" in due:
                 report["cancelled"] = self.executor.run_cancellation()
                 self._last_run["cancel"] = now
             if "resubmit" in due:
                 report["resubmitted"] = besteffort.resubmit_preempted(
+                    self.db, clock=self.clock)
+                report["resubmitted"] += recovery_mod.resubmit_failed(
                     self.db, clock=self.clock)
                 self._last_run["resubmit"] = now
             if "scheduler" in due:
@@ -135,8 +159,9 @@ class CentralModule:
 
     def next_deadline(self, now: float | None = None) -> float | None:
         """Earliest future instant a module must act at without any new
-        notification — aggregated from the modules that can report one
-        (today: the meta-scheduler's next granted-reservation start).
+        notification — aggregated from the modules that can report one:
+        the meta-scheduler's next time event (granted-reservation start or
+        retry-backoff expiry) and the reaper's next lease expiry.
 
         Periodic redundancy is deliberately NOT folded in: it is a
         robustness floor, not an event. A wall-clock driver adds it via
@@ -144,7 +169,7 @@ class CentralModule:
         not (it would tick forever on an idle cluster).
         """
         deadlines = []
-        for module in (self.scheduler,):
+        for module in (self.scheduler, self.recovery):
             report = getattr(module, "next_deadline", None)
             if report is not None:
                 t = report(now)

@@ -159,6 +159,25 @@ class Database:
                 if self._conn.total_changes != changes0:
                     self.generation += 1
 
+    def execute_quiet(self, sql: str, params: Sequence[Any] | dict = ()) -> sqlite3.Cursor:
+        """Write WITHOUT bumping the data generation.
+
+        For telemetry-grade state the scheduler never reads for placement
+        (resource_health scores, probation counters) — the same carve-out
+        log_event gets. Bumping the generation for these would disarm the
+        no-op-pass fast path every monitor sweep, which is exactly the churn
+        the health tier exists to stop. Must not be used for anything a
+        scheduler pass consumes. Autocommits; inside an open transaction()
+        it joins that unit (whose commit also skips counting these changes
+        only if nothing else changed — callers keep quiet writes outside
+        transactions for that reason)."""
+        with self._lock:
+            self.query_count += 1
+            cur = self._conn.execute(sql, params)
+            if self._txn_depth == 0 and self._conn.in_transaction:
+                self._conn.commit()
+            return cur
+
     def query(self, sql: str, params: Sequence[Any] | dict = ()) -> list[sqlite3.Row]:
         with self._lock:
             self.query_count += 1
@@ -179,6 +198,14 @@ class Database:
     def add_notify_hook(self, hook: Callable[[str], None]) -> None:
         self._notify_hooks.append(hook)
 
+    def remove_notify_hook(self, hook: Callable[[str], None]) -> None:
+        """Detach a hook (crash-restart rebuilds replace the control plane
+        against the same store; the dead plane's hooks must not linger)."""
+        try:
+            self._notify_hooks.remove(hook)
+        except ValueError:
+            pass
+
     def notify(self, tag: str) -> None:
         for hook in list(self._notify_hooks):
             hook(tag)
@@ -192,6 +219,12 @@ class Database:
     # O(changed) instead of rescanning the jobs table per event.
     def add_state_observer(self, obs: Callable[[int, str, str], None]) -> None:
         self._state_observers.append(obs)
+
+    def remove_state_observer(self, obs: Callable[[int, str, str], None]) -> None:
+        try:
+            self._state_observers.remove(obs)
+        except ValueError:
+            pass
 
     def observe_state(self, job_id: int, old: str, new: str) -> None:
         for obs in list(self._state_observers):
@@ -207,6 +240,34 @@ class Database:
             )
             if self._txn_depth == 0:
                 self._conn.commit()
+
+    def prune_event_log(self, *, keep_seconds: float | None = None,
+                        keep_rows: int | None = None) -> int:
+        """Retention/compaction for the event log.
+
+        A long chaos run appends an event per failure/retry/reap; unbounded,
+        the table degrades every monitor-window query. Deletes rows older
+        than ``keep_seconds`` (against this handle's clock) and/or beyond the
+        newest ``keep_rows``; returns rows deleted. Quiet by design — the
+        event log never bumps the generation on the way in, so compacting it
+        must not either."""
+        clock = getattr(self, "clock", None) or time.time
+        deleted = 0
+        with self._lock:
+            if keep_seconds is not None:
+                deleted += self._conn.execute(
+                    "DELETE FROM event_log WHERE ts < ?",
+                    (clock() - keep_seconds,)).rowcount
+            if keep_rows is not None:
+                deleted += self._conn.execute(
+                    "DELETE FROM event_log WHERE idEvent <= ("
+                    " SELECT idEvent FROM event_log"
+                    " ORDER BY idEvent DESC LIMIT 1 OFFSET ?)",
+                    (keep_rows,)).rowcount
+            self.query_count += 1
+            if self._txn_depth == 0 and self._conn.in_transaction:
+                self._conn.commit()
+        return deleted
 
     # ------------------------------------------------------------- lifecycle
     def close(self) -> None:

@@ -10,6 +10,8 @@ removal of the submission) goes through 'toError' to 'Error'.
 
 from __future__ import annotations
 
+import time as _time
+
 WAITING = "Waiting"
 HOLD = "Hold"
 TO_LAUNCH = "toLaunch"
@@ -32,7 +34,10 @@ TRANSITIONS: dict[str, frozenset[str]] = {
     HOLD: frozenset({WAITING, TO_ERROR}),
     TO_ACK_RESERVATION: frozenset({WAITING, TO_ERROR}),
     TO_LAUNCH: frozenset({LAUNCHING, TO_ERROR}),
-    LAUNCHING: frozenset({RUNNING, TO_ERROR}),
+    # LAUNCHING -> TO_LAUNCH is the crash-recovery edge: a job caught
+    # mid-launch by a launcher crash (no bpid ever recorded) is pushed back
+    # by the reaper for an idempotent relaunch once its lease expires.
+    LAUNCHING: frozenset({RUNNING, TO_LAUNCH, TO_ERROR}),
     RUNNING: frozenset({TERMINATED, TO_ERROR}),
     TO_ERROR: frozenset({ERROR}),
     TERMINATED: frozenset(),
@@ -72,6 +77,13 @@ def set_state(db, job_id: int, new_state: str, *, message: str | None = None,
         old_state = row["state"]
         check_transition(old_state, new_state)
         sets, params = ["state=?"], [new_state]
+        # stateTime always records when the job entered its current state —
+        # the reaper's lease (orphan = stuck in toLaunch/Launching past the
+        # lease) is measured from it, so it must be stamped even by callers
+        # that don't pass `now` (the store clock covers them).
+        clock = getattr(db, "clock", None)
+        sets.append("stateTime=?")
+        params.append(now if now is not None else (clock() if clock else _time.time()))
         if message is not None:
             sets.append("message=?")
             params.append(message)

@@ -34,7 +34,20 @@ from typing import Callable
 
 from repro.core import jobstate
 
-__all__ = ["SimTransport", "TaktukLauncher", "DeploymentReport", "Executor"]
+__all__ = ["SimTransport", "TaktukLauncher", "DeploymentReport", "Executor",
+           "FLAP_PENALTY", "HEALTH_REWARD", "PROBATION_SWEEPS"]
+
+# Flap-dampened health automaton (resource_health table): every
+# Alive→Suspected flap costs FLAP_PENALTY; a Suspected host must answer
+# PROBATION_SWEEPS consecutive monitor sweeps before it returns to Alive,
+# and each return restores HEALTH_REWARD (capped at 1.0). A host whose
+# health reaches 0 is quarantined to Dead — with these values, the fourth
+# flap (3 × 0.34 > 1.0 net of rewards only if it keeps flapping faster than
+# it earns back) retires a persistent flapper instead of letting it whipsaw
+# the resource pool forever.
+FLAP_PENALTY = 0.34
+HEALTH_REWARD = 0.17
+PROBATION_SWEEPS = 2
 
 
 # --------------------------------------------------------------------------
@@ -178,6 +191,12 @@ class Executor:
         self.launcher = launcher or TaktukLauncher()
         self.check_nodes = check_nodes
         self.runner = runner  # optional real payload runner (data plane)
+        # chaos seam: when set, called with a site tag at crash-relevant
+        # points ("exec:launching" after a job enters Launching). The
+        # simulator's chaos harness arms a hook that raises mid-pass to
+        # model a launcher crash; production leaves it None (one attribute
+        # test per site — no behaviour change).
+        self.chaos_hook: Callable[[str], None] | None = None
 
     # ------------------------------------------------------------- launching
     def launch_pending(self) -> list[int]:
@@ -189,6 +208,8 @@ class Executor:
                 "ON r.idResource=a.idResource WHERE a.idJob=? ORDER BY r.idResource",
                 (jid,))]
             jobstate.set_state(self.db, jid, jobstate.LAUNCHING)
+            if self.chaos_hook is not None:
+                self.chaos_hook("exec:launching")
             if self.check_nodes:
                 rep = self.launcher.check_hosts(hosts)
                 if rep.failed:
@@ -302,24 +323,87 @@ class Executor:
 
     # ------------------------------------------------------------ monitoring
     def monitor_nodes(self) -> DeploymentReport:
-        """Periodic reachability sweep over the whole cluster."""
-        hosts = [r["hostname"] for r in
-                 self.db.query("SELECT hostname FROM resources WHERE state!='Absent'")]
+        """Periodic reachability sweep over the whole cluster.
+
+        Quarantined (Dead) hosts are off the sweep entirely — a retired
+        flapper costs nothing until an administrator revives it. A Suspected
+        host that answers again does NOT come straight back: it must clear
+        ``PROBATION_SWEEPS`` consecutive clean sweeps (and hold health > 0),
+        so a host flapping faster than the probation window never re-enters
+        the pool — and never bumps ``Database.generation`` while it flaps.
+        """
+        hosts = [r["hostname"] for r in self.db.query(
+            "SELECT hostname FROM resources WHERE state NOT IN ('Absent','Dead')")]
         rep = self.launcher.check_hosts(hosts)
         self._mark_dead(rep.failed)
-        # resurrection: hosts answering again come back Alive (elasticity)
         if rep.reached:
-            qmarks = ",".join("?" * len(rep.reached))
-            with self.db.transaction() as cur:
-                cur.execute(
-                    f"UPDATE resources SET state='Alive' WHERE hostname IN ({qmarks}) "
-                    "AND state='Suspected'", rep.reached)
+            self._probation_pass(rep.reached)
         return rep
+
+    def _probation_pass(self, reached: list[str]) -> None:
+        """Advance probation for Suspected hosts that answered; return the
+        ones that served their time to Alive. All counter writes are quiet
+        (health is telemetry); only the actual pool change bumps the
+        generation — once, when the host genuinely comes back."""
+        suspected = self.db.query(
+            "SELECT idResource, hostname FROM resources WHERE state='Suspected'")
+        if not suspected:
+            return
+        back = [r for r in suspected if r["hostname"] in set(reached)]
+        if not back:
+            return
+        now = self.clock()
+        ids = [r["idResource"] for r in back]
+        qmarks = ",".join("?" * len(ids))
+        # hosts suspected by paths that never flapped (e.g. reservation loss)
+        # still need a health row to count probation against
+        self.db.execute_quiet(
+            f"INSERT OR IGNORE INTO resource_health(idResource, lastChange) "
+            f"SELECT idResource, ? FROM resources WHERE idResource IN ({qmarks})",
+            [now, *ids])
+        self.db.execute_quiet(
+            f"UPDATE resource_health SET probation=probation+1, lastChange=? "
+            f"WHERE idResource IN ({qmarks})", [now, *ids])
+        ready = self.db.query(
+            f"SELECT h.idResource, r.hostname FROM resource_health h "
+            f"JOIN resources r ON r.idResource=h.idResource "
+            f"WHERE h.idResource IN ({qmarks}) AND h.probation>=? AND h.health>0",
+            [*ids, PROBATION_SWEEPS])
+        if not ready:
+            return
+        rids = [r["idResource"] for r in ready]
+        rmarks = ",".join("?" * len(rids))
+        with self.db.transaction() as cur:  # the one legitimate bump: the
+            cur.execute(                    # usable pool actually grew
+                f"UPDATE resources SET state='Alive' "
+                f"WHERE idResource IN ({rmarks})", rids)
+        self.db.execute_quiet(
+            f"UPDATE resource_health SET health=MIN(1.0, health+?), "
+            f"probation=0, lastChange=? WHERE idResource IN ({rmarks})",
+            [HEALTH_REWARD, now, *rids])
+        self.db.log_event("monitor", "info",
+                          "nodes back after probation: "
+                          + ",".join(r["hostname"] for r in ready))
+        self.db.notify("scheduler")
 
     def _mark_dead(self, hostnames: list[str]) -> None:
         if not hostnames:
             return
+        now = self.clock()
         qmarks = ",".join("?" * len(hostnames))
+        newly = [r["hostname"] for r in self.db.query(
+            f"SELECT hostname FROM resources WHERE hostname IN ({qmarks}) "
+            f"AND state NOT IN ('Suspected','Dead')", hostnames)]
+        # an already-Suspected host that fails again restarts its probation
+        # clock — quiet: no pool change, no generation bump, no re-plan
+        self.db.execute_quiet(
+            f"UPDATE resource_health SET probation=0, lastChange=? "
+            f"WHERE probation>0 AND idResource IN (SELECT idResource FROM "
+            f"resources WHERE hostname IN ({qmarks}) AND state='Suspected')",
+            [now, *hostnames])
+        if not newly:
+            return
+        nmarks = ",".join("?" * len(newly))
         with self.db.transaction() as cur:
             # only rows actually transitioning: re-suspecting an already-
             # Suspected host every sweep would bump the store generation and
@@ -327,13 +411,34 @@ class Executor:
             # period for the whole duration of an outage — the first
             # transition already failed the jobs and woke the scheduler
             cur.execute(f"UPDATE resources SET state='Suspected' "
-                        f"WHERE hostname IN ({qmarks}) AND state!='Suspected'",
-                        hostnames)
-            newly_suspected = cur.rowcount
-        if not newly_suspected:
-            return
+                        f"WHERE hostname IN ({nmarks})", newly)
+        # health bookkeeping for the flap (quiet: telemetry, not pool state)
+        self.db.execute_quiet(
+            f"INSERT OR IGNORE INTO resource_health(idResource, lastChange) "
+            f"SELECT idResource, ? FROM resources WHERE hostname IN ({nmarks})",
+            [now, *newly])
+        self.db.execute_quiet(
+            f"UPDATE resource_health SET health=health-?, flaps=flaps+1, "
+            f"probation=0, lastChange=? WHERE idResource IN "
+            f"(SELECT idResource FROM resources WHERE hostname IN ({nmarks}))",
+            [FLAP_PENALTY, now, *newly])
+        # quarantine: a repeat flapper whose health is exhausted goes Dead —
+        # off the monitor sweep, off the resurrection path, silent from here
+        drained = self.db.query(
+            f"SELECT r.idResource, r.hostname FROM resources r "
+            f"JOIN resource_health h ON h.idResource=r.idResource "
+            f"WHERE r.hostname IN ({nmarks}) AND h.health<=1e-9", newly)
+        if drained:
+            dmarks = ",".join("?" * len(drained))
+            with self.db.transaction() as cur:
+                cur.execute(f"UPDATE resources SET state='Dead' "
+                            f"WHERE idResource IN ({dmarks})",
+                            [r["idResource"] for r in drained])
+            self.db.log_event(
+                "monitor", "error", "nodes quarantined (flapping): "
+                + ",".join(r["hostname"] for r in drained))
         self.db.log_event("monitor", "warn",
-                          f"nodes suspected (timeout): {','.join(hostnames)}")
+                          f"nodes suspected (timeout): {','.join(newly)}")
         # jobs running on dead nodes fail → rescheduled by resubmission policy
         rows = self.db.query(
             f"SELECT DISTINCT a.idJob FROM assignments a "

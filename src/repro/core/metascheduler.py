@@ -155,8 +155,14 @@ class MetaScheduler:
         # and the memo stays cold.
         self._armed = False
         self._clean_generation = -1
-        self._next_time_event = float("inf")   # earliest granted-reservation
-                                               # start the armed memo ignores
+        self._next_time_event = float("inf")   # earliest time-driven work the
+                                               # armed memo must wake for
+                                               # (reservation start or retry
+                                               # backoff expiry)
+        # chaos seam: when set, called with a site tag after each job is
+        # marked toLaunch — the chaos harness raises here to model a
+        # scheduler crash mid-pass. None in production (attribute test only).
+        self.chaos_hook = None
 
     # ------------------------------------------------------------ main pass
     def run(self) -> dict:
@@ -197,7 +203,7 @@ class MetaScheduler:
             # were fired above (firing writes, so we would not be here).
             self._armed = True
             self._clean_generation = generation0
-            self._next_time_event = self._min_reservation_start()
+            self._next_time_event = self._min_time_event(now)
         self.stats["passes"] += 1
         self.db.log_event("metascheduler", "info",
                           f"pass at {now:.3f}: launched={len(summary['launched'])}")
@@ -213,17 +219,25 @@ class MetaScheduler:
         if self._armed and self.db.generation == self._clean_generation:
             t = self._next_time_event
         else:
-            t = self._min_reservation_start()
+            t = self._min_time_event(now if now is not None else self.clock())
         if t == float("inf") or (now is not None and t <= now + EPS):
             return None
         return t
 
-    def _min_reservation_start(self) -> float:
-        """Earliest granted-but-unfired reservation start (inf if none) —
-        the one way work becomes due by time alone."""
+    def _min_time_event(self, now: float) -> float:
+        """Earliest instant work becomes due by time alone (inf if none):
+        a granted-but-unfired reservation's start, or a retried job's
+        backoff (``earliestStart``) expiring. Backoffs already in the past
+        don't count — such a job is an ordinary Waiting job, and counting it
+        would pin the wake-up time behind ``now`` and disarm the no-op memo
+        forever."""
         t = self.db.scalar(
-            "SELECT MIN(reservationStart) FROM jobs WHERE state='Waiting' "
-            "AND reservation='Scheduled'")
+            "SELECT MIN(t) FROM ("
+            " SELECT MIN(reservationStart) AS t FROM jobs"
+            "  WHERE state='Waiting' AND reservation='Scheduled'"
+            " UNION ALL"
+            " SELECT MIN(earliestStart) FROM jobs"
+            "  WHERE state='Waiting' AND earliestStart > ?)", (now,))
         return t if t is not None else float("inf")
 
     # -------------------------------------------------------------- quotas
@@ -407,7 +421,8 @@ class MetaScheduler:
             candidates=cands, prefer=prefer_bits,
             bestEffort=bool(job["bestEffort"]), alternatives=alternatives,
             deadline=job["deadline"], select_best=select_best,
-            quota=quota, karma=karma, queue_priority=queue_priority)
+            quota=quota, karma=karma, queue_priority=queue_priority,
+            earliestStart=job["earliestStart"] or 0.0)
 
     def _queue_jobs(self, queue: str, cache: PassCache, *,
                     select_best: bool = False, queue_priority: int = 0,
@@ -474,6 +489,8 @@ class MetaScheduler:
                                     (p.walltime, p.idJob))
                 self._assign_and_mark(p.idJob, p.resources)
                 summary["launched"].append(p.idJob)
+                if self.chaos_hook is not None:
+                    self.chaos_hook("sched:marked")
 
     # --------------------------------------------------------- best effort
     def _preempt_besteffort(self, cache: PassCache, placements: list[Placement],

@@ -107,6 +107,9 @@ class JobView:
     quota: tuple | None = None
     karma: float = 0.0
     queue_priority: int = 0
+    # retry-backoff not-before gate (jobs.earliestStart): the Gantt sweep
+    # never plans this job before it. 0.0 (or any past instant) is inert.
+    earliestStart: float = 0.0
 
     def effective_deadline(self) -> float:
         """The deadline the EDF tier orders by: the declared one, or the
@@ -326,7 +329,16 @@ def _place_conservative(gantt: Gantt, ordered: list[JobView], now: float,
     floors: dict = {}   # monotone earliest-fit memo, see find_fit
     index = gantt.index
     for job in ordered:
-        fit = find_fit(gantt, job, floor if chain else now, floors=floors)
+        after = floor if chain else now
+        if job.earliestStart > after + EPS:
+            # retry backoff still running: sweep from the gate instead —
+            # and WITHOUT the shared floors memo, whose soundness argument
+            # (monotone earliest fit per signature) assumes every job in
+            # the run sweeps from the same origin. Delayed jobs are rare,
+            # so the lost memoisation is noise.
+            fit = find_fit(gantt, job, job.earliestStart)
+        else:
+            fit = find_fit(gantt, job, after, floors=floors)
         if fit is None:
             continue  # never fits (bad properties); meta-scheduler flags it
         start, chosen, walltime, override = fit
@@ -405,7 +417,11 @@ def easy_backfill(gantt: Gantt, jobs: list[JobView], now: float) -> list[Placeme
     floors: dict = {}   # sound here too: fits without occupy leave both
     index = gantt.index  # the Gantt and the floor's meaning unchanged
     for job in ordered:
-        fit = find_fit(gantt, job, now, floors=floors)
+        if job.earliestStart > now + EPS:
+            # backoff gate: same floors-skip reasoning as _place_conservative
+            fit = find_fit(gantt, job, job.earliestStart)
+        else:
+            fit = find_fit(gantt, job, now, floors=floors)
         if fit is None:
             continue
         start, chosen, walltime, override = fit

@@ -1,0 +1,263 @@
+"""Failure-recovery tier: retry resubmission and crash-orphan reaping.
+
+The paper's robustness argument (§2) is that the DB holds every piece of
+state, so any module can die and be restarted against the store. This module
+supplies the two recovery passes that make that argument *complete* for
+jobs:
+
+* :func:`resubmit_failed` — regular (non-best-effort) jobs killed by a
+  *system* failure (node death, failed deployment, lost reservation, crash
+  orphaning) are cloned back into the queue with a capped exponential
+  backoff, up to a per-job retry budget (``jobs.maxRetries``). ``Error``
+  stays the terminal state of fig. 1 — a retry is a *new* job row carrying
+  ``retries+1``, exactly the resubmission shape §3.3 uses for preempted
+  best-effort work. User-caused failures (cancellation, walltime overrun,
+  bad properties) are never retried.
+
+* :class:`RecoveryModule` — the store-driven orphan reaper. A job sits in
+  ``toLaunch``/``Launching`` only for the instants between a scheduler
+  marking it and the launcher reporting it Running; if a module crashes in
+  that window, the job is stranded — the restarted control plane must
+  detect it from the store alone. Each in-flight job holds a *lease*
+  (``jobs.stateTime`` + ``lease_s``); past it, the reaper idempotently
+  pushes the job back to ``toLaunch`` (resources still alive: the
+  fig.-1 recovery edge ``Launching → toLaunch``) or fails it with an
+  ``orphaned`` message that the retry pass picks up. This is the
+  correctness prerequisite for running scheduler and launcher as separate
+  killable processes over one store (the ROADMAP's multi-process split).
+
+Both passes cost zero SQL when there is nothing to do: the reaper tracks
+in-flight jobs through the jobstate observer (rebuilt by one scan at
+startup — the crash-recovery contract), and the retry pass is gated by the
+caller on the cheap Error-jobs probe.
+"""
+
+from __future__ import annotations
+
+import time as _time
+
+from repro.core import jobstate
+
+__all__ = ["CrashRestart", "RecoveryModule", "resubmit_failed",
+           "RETRYABLE_PREFIXES", "BACKOFF_BASE", "BACKOFF_CAP",
+           "ORPHAN_LEASE"]
+
+# Failure messages that identify a *system* failure (the launcher/monitor/
+# meta-scheduler wrote them) — only these are retried. Anything else
+# (cancelled, walltime exceeded, quota/admission errors) is the user's or
+# the job's own fault and stays Error on the first strike.
+RETRYABLE_PREFIXES = (
+    "node failure",
+    "nodes failed at launch",
+    "deployment failed",
+    "reserved resources lost",
+    "orphaned",
+)
+
+BACKOFF_BASE = 30.0     # first retry waits this long …
+BACKOFF_CAP = 900.0     # … doubling per attempt, capped here
+ORPHAN_LEASE = 120.0    # toLaunch/Launching older than this is an orphan
+
+
+class CrashRestart(Exception):
+    """Raised by an armed chaos hook to model a module crash mid-pass.
+
+    The simulator catches it around ``central.tick()`` and rebuilds the
+    control plane against the same store — the paper's restart story,
+    exercised instead of assumed.
+    """
+
+    def __init__(self, module: str = "central"):
+        super().__init__(f"chaos: {module} crashed")
+        self.module = module
+
+
+def backoff_delay(retries: int) -> float:
+    """Capped exponential backoff before attempt ``retries + 1``."""
+    return min(BACKOFF_CAP, BACKOFF_BASE * (2 ** retries))
+
+
+def resubmit_failed(db, *, clock=None) -> list[int]:
+    """Clone retry-eligible failed regular jobs into fresh submissions.
+
+    Eligible: ``Error`` state, ``bestEffort=0``, a retryable system-failure
+    message, retry budget not exhausted, not already resubmitted. The clone
+    carries the full spec *and tenant identity* (user, project), bumps
+    ``retries`` and gates itself behind ``earliestStart = now + backoff`` —
+    the not-before constraint the Gantt sweep enforces. Ancestors are marked
+    ``[resubmitted]`` so they are cloned exactly once. Returns new job ids.
+
+    A job whose budget is exhausted is left alone: Error is its terminal
+    state ("budget-exhausted Error"), and the event log records the verdict.
+    """
+    clock = clock or getattr(db, "clock", None) or _time.time
+    now = clock()
+    like = " OR ".join("message LIKE ?" for _ in RETRYABLE_PREFIXES)
+    params = [p + "%" for p in RETRYABLE_PREFIXES]
+    rows = db.query(
+        f"SELECT * FROM jobs WHERE state='Error' AND bestEffort=0 "
+        f"AND toCancel=0 AND message NOT LIKE '%[resubmitted]' AND ({like})",
+        params)
+    if not rows:
+        return []
+    eligible = [j for j in rows if j["retries"] < j["maxRetries"]]
+    exhausted = [j for j in rows if j["retries"] >= j["maxRetries"]]
+    for job in exhausted:
+        # mark so the budget verdict is logged once, not every pass
+        db.log_event("recovery", "warn",
+                     f"retry budget exhausted after {job['retries']} retries",
+                     job["idJob"])
+    clones = []
+    for job in eligible:
+        delay = backoff_delay(job["retries"])
+        clones.append((
+            job["jobType"], job["infoType"], "Waiting", job["user"],
+            job["project"], job["nbNodes"], job["weight"], job["command"],
+            job["queueName"], job["maxTime"], job["properties"],
+            job["launchingDirectory"], now, job["bestEffort"],
+            job["checkpointPath"], job["resourceRequest"], job["deadline"],
+            job["retries"] + 1, job["maxRetries"], now + delay,
+            f"retry {job['retries'] + 1}/{job['maxRetries']} of job "
+            f"{job['idJob']}"))
+    with db.transaction() as cur:
+        marks = [(job["idJob"],) for job in rows]
+        if clones:
+            # batched like besteffort.resubmit_preempted; clone ids recovered
+            # from MAX(idJob) under the handle's writer lock
+            cur.executemany(
+                "INSERT INTO jobs(jobType, infoType, state, user, project,"
+                " nbNodes, weight, command, queueName, maxTime, properties,"
+                " launchingDirectory, submissionTime, bestEffort,"
+                " checkpointPath, resourceRequest, deadline, retries,"
+                " maxRetries, earliestStart, message)"
+                " VALUES (?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?,?)", clones)
+            top = cur.execute("SELECT MAX(idJob) FROM jobs").fetchone()[0]
+            new_ids = list(range(top - len(clones) + 1, top + 1))
+        else:
+            new_ids = []
+        # exhausted jobs are marked too: their verdict is final
+        cur.executemany("UPDATE jobs SET message = message || ' [resubmitted]' "
+                        "WHERE idJob=?", marks)
+    for job, nid in zip(eligible, new_ids):
+        # durable ancestor -> clone link: the clone's message is overwritten
+        # when it completes, but the event log keeps the lineage (MTTR in
+        # benchmarks/chaos.py joins kill time to the clone's start through it)
+        db.log_event("recovery", "info",
+                     f"resubmitted as job {nid} (retry "
+                     f"{job['retries'] + 1}/{job['maxRetries']}, backoff "
+                     f"{backoff_delay(job['retries']):.0f}s)", job["idJob"])
+    if new_ids:
+        db.notify("scheduler")
+    return new_ids
+
+
+class RecoveryModule:
+    """Crash-orphan reaper — store-driven, O(1) when nothing is in flight.
+
+    Tracks jobs in ``toLaunch``/``Launching`` via the jobstate observer (no
+    polling); a fresh instance — the crash-restart case — rebuilds the set
+    with one indexed scan, trusting ``jobs.stateTime`` for how long each
+    orphan has already waited. :meth:`reap` acts only on lease-expired
+    entries, re-checking the store before every action so a reap can never
+    double-launch a job that made progress in the meantime (idempotence).
+    """
+
+    def __init__(self, db, *, clock=None, lease: float = ORPHAN_LEASE):
+        self.db = db
+        self.clock = clock or getattr(db, "clock", None) or _time.time
+        self.lease = lease
+        self.stats = {"reaps": 0, "requeued": 0, "orphan_errors": 0}
+        self._inflight: dict[int, float] = {}
+        for row in db.query(
+                "SELECT idJob, stateTime FROM jobs "
+                "WHERE state IN ('toLaunch','Launching')"):
+            self._inflight[row["idJob"]] = row["stateTime"] or 0.0
+        db.add_state_observer(self._observe)
+
+    def detach(self) -> None:
+        """Unhook from the store (a rebuilt control plane replaces this
+        instance; the dead one must stop shadow-tracking)."""
+        self.db.remove_state_observer(self._observe)
+
+    def _observe(self, job_id: int, old: str, new: str) -> None:
+        if new in (jobstate.TO_LAUNCH, jobstate.LAUNCHING):
+            self._inflight[job_id] = self.clock()
+        else:
+            self._inflight.pop(job_id, None)
+
+    def next_deadline(self, now: float | None = None) -> float | None:
+        """Earliest instant a lease can expire — None when nothing is in
+        flight (the common case; no SQL either way)."""
+        if not self._inflight:
+            return None
+        t = min(self._inflight.values()) + self.lease
+        if now is not None and t <= now:
+            t = now  # overdue: act immediately
+        return t
+
+    def reap(self) -> list[int]:
+        """Converge lease-expired in-flight jobs; returns the ids acted on.
+
+        For each expired job (per the store, not just the memo):
+
+        * assigned resources all Alive → push back for an idempotent
+          relaunch: ``Launching → toLaunch`` (the recovery edge) and wake
+          the launcher. ``toLaunch`` orphans just get the wake-up — the
+          launcher leg picks them up as-is.
+        * any assigned resource lost (or no assignment survived) → fail it
+          with an ``orphaned`` message; the retry pass resubmits it under
+          its backoff budget.
+        """
+        now = self.clock()
+        due = [jid for jid, t in self._inflight.items()
+               if t + self.lease <= now]
+        if not due:
+            return []
+        acted: list[int] = []
+        poke_launcher = False
+        for jid in due:
+            row = self.db.query_one(
+                "SELECT state, stateTime FROM jobs WHERE idJob=?", (jid,))
+            if row is None or row["state"] not in ("toLaunch", "Launching"):
+                self._inflight.pop(jid, None)  # stale memo entry
+                continue
+            if row["stateTime"] and row["stateTime"] + self.lease > now:
+                self._inflight[jid] = row["stateTime"]  # lease renewed
+                continue
+            res = self.db.query(
+                "SELECT r.state FROM assignments a JOIN resources r "
+                "ON r.idResource=a.idResource WHERE a.idJob=?", (jid,))
+            alive = bool(res) and all(r["state"] == "Alive" for r in res)
+            if alive:
+                if row["state"] == "Launching":
+                    jobstate.set_state(self.db, jid, jobstate.TO_LAUNCH,
+                                       message=f"orphaned in Launching; "
+                                               f"relaunching", now=now)
+                else:
+                    # a toLaunch orphan is already in the launcher's input
+                    # set; it only needs a launcher leg to actually run
+                    self._inflight[jid] = now  # re-lease, don't re-log
+                self.db.log_event("recovery", "warn",
+                                  f"orphan past lease in {row['state']}; "
+                                  f"relaunching", jid)
+                poke_launcher = True
+                self.stats["requeued"] += 1
+            else:
+                jobstate.set_state(self.db, jid, jobstate.TO_ERROR,
+                                   message="orphaned: assigned resources "
+                                           "lost", now=now)
+                jobstate.set_state(self.db, jid, jobstate.ERROR, now=now)
+                with self.db.transaction() as cur:
+                    cur.execute("DELETE FROM assignments WHERE idJob=?", (jid,))
+                    cur.execute("DELETE FROM gantt WHERE idJob=?", (jid,))
+                self.db.log_event("recovery", "warn",
+                                  "orphan with lost resources; resubmitting",
+                                  jid)
+                self.db.notify("resubmit")
+                self.stats["orphan_errors"] += 1
+            acted.append(jid)
+        if poke_launcher:
+            self.db.notify("launcher")
+        if acted:
+            self.stats["reaps"] += 1
+        return acted

@@ -42,7 +42,12 @@ CREATE TABLE IF NOT EXISTS jobs (
     reservationStart    REAL,                             -- requested slot (reservations)
     checkpointPath      TEXT DEFAULT '',                  -- data-plane resume handle
     resourceRequest     TEXT,                             -- canonical JSON (request.py)
-    deadline            REAL                              -- submission contract (Libra)
+    deadline            REAL,                             -- submission contract (Libra)
+    -- failure-recovery tier --
+    retries             INTEGER NOT NULL DEFAULT 0,       -- resubmission generation
+    maxRetries          INTEGER NOT NULL DEFAULT 3,       -- retry budget (0 = never)
+    earliestStart       REAL,                             -- backoff not-before gate
+    stateTime           REAL NOT NULL DEFAULT 0           -- last transition (reaper lease)
 )
 """
 
@@ -140,8 +145,26 @@ CREATE TABLE IF NOT EXISTS accounting (
 )
 """
 
+# Failure-recovery tier (core/recovery.py + launcher monitor sweep): one row
+# per resource that has ever flapped. `health` is a leaky score in [0, 1]
+# (each failure subtracts, each probation pass restores a little); when it
+# reaches 0 the host is quarantined to Dead. `probation` counts consecutive
+# clean monitor sweeps while Suspected — the host returns to Alive only after
+# enough of them, so a flapping host stops whipsawing the resource pool (and
+# `Database.generation`) every sweep. Rows are written via execute_quiet:
+# health is telemetry about the pool, not scheduler state.
+RESOURCE_HEALTH = """
+CREATE TABLE IF NOT EXISTS resource_health (
+    idResource INTEGER PRIMARY KEY REFERENCES resources(idResource),
+    health     REAL NOT NULL DEFAULT 1.0,
+    probation  INTEGER NOT NULL DEFAULT 0,   -- consecutive clean sweeps
+    flaps      INTEGER NOT NULL DEFAULT 0,   -- lifetime failure count
+    lastChange REAL NOT NULL DEFAULT 0
+)
+"""
+
 ALL_TABLES = [JOBS, RESOURCES, ASSIGNMENTS, QUEUES, ADMISSION_RULES, GANTT,
-              EVENT_LOG, QUOTA_RULES, ACCOUNTING]
+              EVENT_LOG, QUOTA_RULES, ACCOUNTING, RESOURCE_HEALTH]
 
 ALL_INDEXES = [
     "CREATE INDEX IF NOT EXISTS idx_jobs_state ON jobs(state)",
@@ -149,6 +172,10 @@ ALL_INDEXES = [
     "CREATE INDEX IF NOT EXISTS idx_assign_job ON assignments(idJob)",
     "CREATE INDEX IF NOT EXISTS idx_gantt_job ON gantt(idJob)",
     "CREATE INDEX IF NOT EXISTS idx_events_job ON event_log(job_id)",
+    # event-log scans by module over a time window (monitor/chaos forensics,
+    # retention pruning) — without this a 100k-event failure trace degrades
+    # every such query to a full table scan
+    "CREATE INDEX IF NOT EXISTS idx_events_module_ts ON event_log(module, ts)",
     # covering indexes for the meta-scheduler pass's hot predicates:
     # queue scan (state, reservation, queue, ordered by idJob) ...
     "CREATE INDEX IF NOT EXISTS idx_jobs_sched "
@@ -170,6 +197,13 @@ JOBS_MIGRATIONS = [
     ("deadline", "ALTER TABLE jobs ADD COLUMN deadline REAL"),
     ("project", "ALTER TABLE jobs ADD COLUMN project TEXT "
                 "NOT NULL DEFAULT 'default'"),
+    ("retries", "ALTER TABLE jobs ADD COLUMN retries INTEGER "
+                "NOT NULL DEFAULT 0"),
+    ("maxRetries", "ALTER TABLE jobs ADD COLUMN maxRetries INTEGER "
+                   "NOT NULL DEFAULT 3"),
+    ("earliestStart", "ALTER TABLE jobs ADD COLUMN earliestStart REAL"),
+    ("stateTime", "ALTER TABLE jobs ADD COLUMN stateTime REAL "
+                  "NOT NULL DEFAULT 0"),
 ]
 
 # A store that predates a column also predates the default admission rules

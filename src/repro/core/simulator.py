@@ -37,6 +37,7 @@ from __future__ import annotations
 import heapq
 import itertools
 import json
+import random
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -46,8 +47,10 @@ from repro.core.db import connect
 from repro.core.gantt import EPS
 from repro.core.launcher import Executor, SimTransport, TaktukLauncher
 from repro.core.metascheduler import MetaScheduler
+from repro.core.recovery import CrashRestart
 
-__all__ = ["ClusterSimulator", "JobRecord"]
+__all__ = ["ClusterSimulator", "JobRecord", "ChaosEvent", "ChaosTrace",
+           "make_chaos_trace"]
 
 
 @dataclass(order=True)
@@ -96,13 +99,84 @@ class JobRecord:
                 and self.stop <= self.deadline + EPS)
 
 
+@dataclass(frozen=True)
+class ChaosEvent:
+    """One entry of a seeded fault trace: a host failing/recovering, or a
+    module crash-restart (``target`` = "scheduler" | "launcher" | "central";
+    ``after`` = raise after that many marked/launched jobs, None = restart
+    between passes)."""
+    time: float
+    kind: str                 # "fail" | "revive" | "crash"
+    target: str
+    after: int | None = None  # crash only
+
+
+@dataclass(frozen=True)
+class ChaosTrace:
+    """A replayable fault schedule — same trace, same virtual history."""
+    seed: int
+    events: tuple[ChaosEvent, ...]
+
+
+def make_chaos_trace(topology: list[tuple[str, int, str]], *, seed: int = 0,
+                     horizon: float, node_mtbf: float, mttr: float = 300.0,
+                     correlated_p: float = 0.1, flappers: int = 0,
+                     flap_period: float = 120.0,
+                     crashes: tuple = ()) -> ChaosTrace:
+    """Generate a seeded fault trace over a cluster topology.
+
+    ``topology`` is ``[(hostname, pod, switch), ...]`` (what
+    :meth:`ClusterSimulator.topology` returns). Per-host failures arrive as
+    a Poisson process with mean interarrival ``node_mtbf`` and recover after
+    an exponential outage of mean ``mttr``; with probability
+    ``correlated_p`` a failure takes out the host's whole switch at once
+    (the blast-radius case — a ToR dying, not a PSU). The first
+    ``flappers`` hosts instead cycle down/up every ``flap_period`` — faster
+    than the monitor probation window, so the health tier must quarantine
+    them. ``crashes`` is a tuple of ``(time, module, after)`` crash-restart
+    injections. Everything is drawn from ``random.Random(seed)`` — the
+    trace is a value, replayable bit-for-bit.
+    """
+    rng = random.Random(seed)
+    switch_members: dict[tuple[int, str], list[str]] = {}
+    for host, pod, switch in topology:
+        switch_members.setdefault((pod, switch), []).append(host)
+    hosts = [t[0] for t in topology]
+    flap_set = set(hosts[:flappers])
+    events: list[ChaosEvent] = []
+    for host, pod, switch in topology:
+        if host in flap_set:
+            continue
+        t = rng.expovariate(1.0 / node_mtbf)
+        while t < horizon:
+            down = rng.expovariate(1.0 / mttr)
+            victims = (switch_members[(pod, switch)]
+                       if rng.random() < correlated_p else [host])
+            for v in victims:
+                events.append(ChaosEvent(round(t, 6), "fail", v))
+                events.append(ChaosEvent(round(t + down, 6), "revive", v))
+            t += down + rng.expovariate(1.0 / node_mtbf)
+    for host in sorted(flap_set):
+        t = flap_period
+        while t < horizon:
+            events.append(ChaosEvent(round(t, 6), "fail", host))
+            events.append(ChaosEvent(round(t + flap_period / 2, 6),
+                                     "revive", host))
+            t += flap_period
+    for (t, module, after) in crashes:
+        events.append(ChaosEvent(t, "crash", module, after))
+    events.sort(key=lambda e: (e.time, e.kind, e.target))
+    return ChaosTrace(seed=seed, events=tuple(events))
+
+
 class ClusterSimulator:
     """A virtual cluster around the real control plane.
 
     Queue future events with :meth:`submit` / :meth:`fail_node` /
-    :meth:`revive_node` / :meth:`add_nodes`, then :meth:`run` them; the
-    return value is one :class:`JobRecord` per known job. See the README
-    "Simulation" section for a walkthrough.
+    :meth:`revive_node` / :meth:`add_nodes` / :meth:`crash_module` (or a
+    whole seeded :class:`ChaosTrace` via :meth:`inject_chaos`), then
+    :meth:`run` them; the return value is one :class:`JobRecord` per known
+    job. See the README "Simulation" section for a walkthrough.
     """
 
     def __init__(self, *, n_nodes: int = 17, weight: int = 2, pods: int = 1,
@@ -145,20 +219,18 @@ class ClusterSimulator:
         with self.db.transaction() as cur:
             cur.execute("UPDATE queues SET policy=?, moldable=?",
                         (policy, moldable))
-        clock = lambda: self.now  # noqa: E731
         self.transport = transport or SimTransport()
-        scheduler = MetaScheduler(self.db, clock=clock,
-                                  besteffort_victim_policy=victim_policy)
-        executor = Executor(self.db, clock=clock,
-                            launcher=TaktukLauncher(self.transport),
-                            check_nodes=check_nodes)
-        # periodic redundancy in *virtual* time: scheduler_period is the
-        # common knob (ESP runs disable it with a huge value); periods= can
-        # retune any task, e.g. {"monitor": 3600.0} to make full-cluster
-        # reachability sweeps hourly instead of per-minute
-        self.central = CentralModule(
-            self.db, clock=clock, scheduler=scheduler, executor=executor,
-            periods={"scheduler": scheduler_period, **(periods or {})})
+        # saved so a crash-restart can rebuild an identically-configured
+        # control plane against the same store (chaos harness / recovery
+        # tests). periods=: periodic redundancy in *virtual* time —
+        # scheduler_period is the common knob (ESP runs disable it with a
+        # huge value); periods= can retune any task, e.g.
+        # {"monitor": 3600.0} for hourly reachability sweeps
+        self._victim_policy = victim_policy
+        self._check_nodes = check_nodes
+        self._periods = {"scheduler": scheduler_period, **(periods or {})}
+        self.restarts = 0
+        self.central = self._make_control_plane()
         self.records: dict[int, JobRecord] = {}
         self._completion_scheduled: set[int] = set()
         self.trace: list[tuple[float, int]] = []  # (t, procs_in_use) for figs 4-8
@@ -173,6 +245,36 @@ class ClusterSimulator:
         self._next_wakeup: float | None = None
         self.db.add_state_observer(self._observe_state)
 
+    # ------------------------------------------------------- control plane
+    def _make_control_plane(self) -> CentralModule:
+        clock = lambda: self.now  # noqa: E731
+        scheduler = MetaScheduler(
+            self.db, clock=clock,
+            besteffort_victim_policy=self._victim_policy)
+        executor = Executor(self.db, clock=clock,
+                            launcher=TaktukLauncher(self.transport),
+                            check_nodes=self._check_nodes)
+        return CentralModule(self.db, clock=clock, scheduler=scheduler,
+                             executor=executor, periods=dict(self._periods))
+
+    def _rebuild_control_plane(self) -> None:
+        """The paper's restart story, exercised: throw the whole control
+        plane away and stand up a fresh one against the same store. The new
+        plane starts cold (unarmed memo, every task pending — a full
+        rebuild), and the reaper's startup scan re-adopts any job the dead
+        plane left in flight."""
+        self.central.detach()
+        self.restarts += 1
+        self.central = self._make_control_plane()
+        self.db.log_event("simulator", "warn",
+                          f"control plane restarted (#{self.restarts})")
+
+    def topology(self) -> list[tuple[str, int, str]]:
+        """(hostname, pod, switch) rows — the input to
+        :func:`make_chaos_trace`'s blast-radius grouping."""
+        return [(r["hostname"], r["pod"], r["switch"]) for r in self.db.query(
+            "SELECT hostname, pod, switch FROM resources ORDER BY idResource")]
+
     # ---------------------------------------------------------------- events
     def _push(self, t: float, kind: str, payload: Any = None) -> None:
         heapq.heappush(self._heap, _Event(t, next(self._seq), kind, payload))
@@ -184,7 +286,8 @@ class ClusterSimulator:
                properties: str = "", reservation_start: float | None = None,
                best_effort: bool | None = None, tag: str = "",
                request: str | None = None,
-               deadline: float | None = None) -> None:
+               deadline: float | None = None,
+               max_retries: int | None = None) -> None:
         """Queue a submission event at virtual time ``at``.
 
         ``duration`` is the job's *actual* run time (virtual); ``max_time``
@@ -200,6 +303,8 @@ class ClusterSimulator:
         ``reservation_start`` asks for an exact slot (the fig. 1
         ``toAckReservation`` negotiation); ``queue`` routes to a queue
         ("interactive", "default", "besteffort" by default).
+        ``max_retries`` is the job's budget against *system* failures
+        (node death, crash orphaning — default 3; 0 disables retries).
         """
         self._push(at, "submit", {
             "duration": duration, "nb_nodes": nb_nodes, "weight": weight,
@@ -207,18 +312,48 @@ class ClusterSimulator:
             "queue": queue, "user": user, "project": project,
             "properties": properties,
             "reservation_start": reservation_start, "best_effort": best_effort,
-            "tag": tag, "request": request, "deadline": deadline})
+            "tag": tag, "request": request, "deadline": deadline,
+            "max_retries": max_retries})
 
     def fail_node(self, at: float, hostname: str) -> None:
         """Make ``hostname`` unreachable from time ``at``: the next
         monitoring sweep marks it Suspected and fails jobs running there
-        (which best-effort resubmission or a new submission can pick up)."""
+        (retry resubmission or best-effort resubmission picks them up)."""
         self._push(at, "fail", hostname)
 
     def revive_node(self, at: float, hostname: str) -> None:
-        """Opposite of :meth:`fail_node`: the host answers again from ``at``
-        and the next sweep returns it to Alive (elastic recovery)."""
+        """Opposite of :meth:`fail_node`: the host answers again from ``at``.
+        It returns to Alive only after clearing the monitor's probation
+        (``PROBATION_SWEEPS`` consecutive clean sweeps) — a host flapping
+        faster than that window stays out of the pool, and a repeat flapper
+        whose health score drains is quarantined to Dead for good."""
         self._push(at, "revive", hostname)
+
+    def crash_module(self, at: float, module: str = "central", *,
+                     after: int | None = None) -> None:
+        """Inject a crash-restart of the control plane at virtual time
+        ``at``. ``module`` picks the crash site: "scheduler" dies mid-pass
+        after marking ``after`` more jobs toLaunch, "launcher" dies after
+        moving ``after`` more jobs into Launching (both leave in-flight
+        orphans — the reaper's job), "central" (or ``after=None``) restarts
+        between passes. The replacement plane is rebuilt from the store
+        alone."""
+        self._push(at, "crash", {"module": module, "after": after})
+
+    def inject_chaos(self, trace: ChaosTrace) -> None:
+        """Queue every event of a seeded fault trace (see
+        :func:`make_chaos_trace`). Traces are values: injecting the same
+        trace into an identically-seeded workload replays the same virtual
+        history."""
+        for ev in trace.events:
+            if ev.kind == "fail":
+                self.fail_node(ev.time, ev.target)
+            elif ev.kind == "revive":
+                self.revive_node(ev.time, ev.target)
+            elif ev.kind == "crash":
+                self.crash_module(ev.time, ev.target, after=ev.after)
+            else:
+                raise ValueError(f"unknown chaos event kind {ev.kind!r}")
 
     def add_nodes(self, at: float, hostnames: list[str], **kw) -> None:
         """Elastic scale-up at time ``at``: new resources are schedulable
@@ -263,11 +398,19 @@ class ClusterSimulator:
         modules converge because every action either changes job state
         toward a final state or writes nothing and stops notifying).
         """
-        central = self.central
         for _ in range(1000):   # defensive bound, as in the daemon loop
+            central = self.central   # re-read: a crash may have replaced it
             if not (central.has_pending or central.periodic_due(self.now)):
                 break
-            central.tick()
+            try:
+                central.tick()
+            except CrashRestart as exc:
+                # an armed chaos hook fired mid-pass: the control plane dies
+                # with jobs in flight and a replacement is rebuilt from the
+                # store — recovery must converge from whatever was committed
+                self.db.log_event("simulator", "error",
+                                  f"injected crash mid-pass: {exc.module}")
+                self._rebuild_control_plane()
         self._plan_completions()
         self._plan_wakeup()
         if self._usage_dirty:
@@ -318,6 +461,7 @@ class ClusterSimulator:
                 properties=p["properties"], request=p.get("request"),
                 reservation_start=p["reservation_start"],
                 best_effort=p["best_effort"], deadline=p.get("deadline"),
+                max_retries=p.get("max_retries"),
                 clock=lambda: self.now)
         except api.AdmissionError as exc:
             # a rejected submission (e.g. rule 12: unreachable deadline) is a
@@ -353,11 +497,15 @@ class ClusterSimulator:
             self.central.executor.complete(jid, ok=ok, message=msg)
 
     def _on_tick(self, _p) -> None:
-        # a planned wake-up exists to let the scheduler act (e.g. a granted
-        # reservation whose start time has come) — notify it explicitly
+        # a planned wake-up exists to let a module act (a granted
+        # reservation or retry backoff coming due for the scheduler, an
+        # orphan lease expiring for the reaper) — notify them explicitly
         if self._next_wakeup is not None and self._next_wakeup <= self.now + EPS:
             self._next_wakeup = None
         self.db.notify("scheduler")
+        t = self.central.recovery.next_deadline(self.now)
+        if t is not None and t <= self.now + EPS:
+            self.db.notify("reaper")
 
     def _on_fail(self, hostname: str) -> None:
         self.transport.failed_hosts.add(hostname)
@@ -370,6 +518,29 @@ class ClusterSimulator:
     def _on_grow(self, payload) -> None:
         hostnames, kw = payload
         api.add_resources(self.db, hostnames, **kw)
+
+    def _on_crash(self, payload: dict) -> None:
+        module, after = payload["module"], payload.get("after")
+        if module == "central" or not after:
+            # clean-cut restart between passes
+            self._rebuild_control_plane()
+            return
+        # arm a one-shot hook on the targeted module: the Nth site hit from
+        # now raises CrashRestart mid-pass (caught in _drain)
+        counter = {"left": after}
+        def hook(site: str, _module=module, _counter=counter):
+            _counter["left"] -= 1
+            if _counter["left"] <= 0:
+                raise CrashRestart(_module)
+        if module == "scheduler":
+            self.central.scheduler.chaos_hook = hook
+        elif module == "launcher":
+            self.central.executor.chaos_hook = hook
+        else:
+            raise ValueError(f"unknown crash target {module!r}")
+        # something must happen for the hook to fire — make sure the module
+        # actually runs even if the system is otherwise idle
+        self.db.notify("scheduler")
 
     # ----------------------------------------------------------- bookkeeping
     def _plan_completions(self) -> None:

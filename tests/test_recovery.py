@@ -1,0 +1,366 @@
+"""Failure-recovery tier: retry-with-backoff resubmission, the flap-dampened
+health automaton, the crash-orphan reaper, and the seeded chaos harness.
+
+The paper's robustness story (§2) — any module can die and be restarted
+against the store — is exercised here instead of assumed: jobs killed by
+node failures come back with a capped backoff under a per-job budget,
+flapping hosts serve probation and get quarantined instead of whipsawing the
+pool, and a control plane killed with jobs mid-launch converges after
+restart with no orphans and no double launches."""
+
+from repro.core import api, besteffort, connect, jobstate, recovery
+from repro.core.launcher import (Executor, SimTransport, TaktukLauncher,
+                                 FLAP_PENALTY, HEALTH_REWARD)
+from repro.core.metascheduler import MetaScheduler
+from repro.core.simulator import ClusterSimulator, make_chaos_trace
+
+
+# ----------------------------------------------------------- retry/backoff
+def test_backoff_delay_doubles_and_caps():
+    assert recovery.backoff_delay(0) == recovery.BACKOFF_BASE
+    assert recovery.backoff_delay(1) == recovery.BACKOFF_BASE * 2
+    assert recovery.backoff_delay(99) == recovery.BACKOFF_CAP
+
+
+def test_node_failure_retries_with_backoff_end_to_end():
+    """A regular job killed by a node failure is cloned under backoff and
+    completes on the surviving host; the ancestor stays terminal Error."""
+    sim = ClusterSimulator(n_nodes=2, weight=1)
+    sim.submit(0.0, duration=100.0, nb_nodes=1, max_time=200.0)
+    sim.fail_node(30.0, "pod0-host0")      # the host the job landed on
+    recs = sim.run()
+    assert [r.state for r in recs] == ["Error", "Terminated"]
+    ancestor, clone = recs
+    row = sim.db.query_one("SELECT * FROM jobs WHERE idJob=?",
+                           (clone.idJob,))
+    assert row["retries"] == 1 and row["maxRetries"] == 3
+    # killed at t=30; first retry waits BACKOFF_BASE from the resubmit pass
+    assert row["earliestStart"] == 30.0 + recovery.BACKOFF_BASE
+    assert clone.start >= row["earliestStart"]
+    assert sim.db.scalar("SELECT message FROM jobs WHERE idJob=?",
+                         (ancestor.idJob,)) == "node failure [resubmitted]"
+
+
+def test_retry_budget_exhausted_is_terminal():
+    """max_retries=0: the first system failure is final — no clone, one
+    budget-exhausted verdict in the event log, Error stays terminal."""
+    db = connect()
+    api.add_resources(db, ["h0"])
+    jid = api.oarsub(db, "x", max_time=60.0, max_retries=0)
+    db.execute("UPDATE jobs SET state='Error', message='node failure' "
+               "WHERE idJob=?", (jid,))
+    assert recovery.resubmit_failed(db, clock=lambda: 100.0) == []
+    assert db.scalar("SELECT COUNT(*) FROM jobs") == 1
+    assert db.scalar("SELECT message FROM jobs") == "node failure [resubmitted]"
+    assert db.scalar("SELECT COUNT(*) FROM event_log WHERE module='recovery' "
+                     "AND message LIKE 'retry budget exhausted%'") == 1
+    # marked: a second pass does not re-litigate the verdict
+    assert recovery.resubmit_failed(db, clock=lambda: 200.0) == []
+
+
+def test_user_faults_are_never_retried():
+    db = connect()
+    api.add_resources(db, ["h0"])
+    jid = api.oarsub(db, "x", max_time=60.0)
+    db.execute("UPDATE jobs SET state='Error', message='walltime exceeded' "
+               "WHERE idJob=?", (jid,))
+    assert recovery.resubmit_failed(db, clock=lambda: 10.0) == []
+    assert db.scalar("SELECT COUNT(*) FROM jobs") == 1
+    assert db.scalar("SELECT message FROM jobs") == "walltime exceeded"
+
+
+def test_retry_clone_carries_spec_and_tenant():
+    db = connect()
+    api.add_resources(db, ["h0", "h1"])
+    jid = api.oarsub(db, "payload", user="alice", project="tenantA",
+                     max_time=60.0)
+    db.execute("UPDATE jobs SET state='Error', message='node failure' "
+               "WHERE idJob=?", (jid,))
+    (cid,) = recovery.resubmit_failed(db, clock=lambda: 50.0)
+    row = db.query_one("SELECT * FROM jobs WHERE idJob=?", (cid,))
+    assert (row["user"], row["project"]) == ("alice", "tenantA")
+    assert row["command"] == "payload" and row["state"] == "Waiting"
+    assert row["retries"] == 1 and row["earliestStart"] == 50.0 + 30.0
+    # lineage survives message overwrite: the recovery log names the clone
+    assert db.scalar(
+        "SELECT COUNT(*) FROM event_log WHERE module='recovery' AND job_id=? "
+        "AND message LIKE ?", (jid, f"resubmitted as job {cid}%")) == 1
+
+
+def test_earliest_start_gates_scheduling_and_reports_deadline():
+    """The backoff not-before constraint: the Gantt sweep plans the delayed
+    job at its earliestStart and the scheduler reports that instant as its
+    next time event (so the idle control plane wakes exactly then)."""
+    db = connect()
+    api.add_resources(db, ["h0", "h1"])
+    now = {"t": 0.0}
+    sched = MetaScheduler(db, clock=lambda: now["t"])
+    jid = api.oarsub(db, "x", nb_nodes=1, max_time=60.0,
+                     clock=lambda: now["t"])
+    db.execute("UPDATE jobs SET earliestStart=50.0 WHERE idJob=?", (jid,))
+    summary = sched.run()
+    assert jid not in summary.get("launched", [])
+    assert jobstate.get_state(db, jid) == "Waiting"
+    assert sched.next_deadline() == 50.0
+    now["t"] = 50.0
+    assert jid in sched.run()["launched"]
+
+
+# -------------------------------------------------- flap-dampened health
+def _monitored_cluster(hosts=("h0", "h1")):
+    db = connect()
+    api.add_resources(db, list(hosts))
+    tr = SimTransport()
+    ex = Executor(db, launcher=TaktukLauncher(tr), check_nodes=False)
+    return db, tr, ex
+
+
+def test_suspected_host_serves_probation_before_alive():
+    db, tr, ex = _monitored_cluster()
+    tr.failed_hosts.add("h0")
+    ex.monitor_nodes()
+    assert db.scalar("SELECT state FROM resources WHERE hostname='h0'") \
+        == "Suspected"
+    tr.failed_hosts.discard("h0")
+    ex.monitor_nodes()                     # clean sweep 1: still on probation
+    assert db.scalar("SELECT state FROM resources WHERE hostname='h0'") \
+        == "Suspected"
+    ex.monitor_nodes()                     # clean sweep 2: served its time
+    assert db.scalar("SELECT state FROM resources WHERE hostname='h0'") \
+        == "Alive"
+    h = db.query_one("SELECT * FROM resource_health WHERE idResource="
+                     "(SELECT idResource FROM resources WHERE hostname='h0')")
+    assert abs(h["health"] - (1.0 - FLAP_PENALTY + HEALTH_REWARD)) < 1e-9
+    assert h["flaps"] == 1 and h["probation"] == 0
+
+
+def test_down_host_does_not_churn_generation_every_sweep():
+    """The health tier's point: an ongoing outage must not bump the store
+    generation per sweep — the first transition paid once, after that the
+    armed no-op fast path stays armed."""
+    db, tr, ex = _monitored_cluster()
+    tr.failed_hosts.add("h0")
+    ex.monitor_nodes()                     # the one legitimate bump
+    g = db.generation
+    ex.monitor_nodes()
+    ex.monitor_nodes()
+    assert db.generation == g
+    # an interrupted probation restarts quietly too
+    tr.failed_hosts.discard("h0")
+    ex.monitor_nodes()                     # probation 1 (quiet)
+    tr.failed_hosts.add("h0")
+    ex.monitor_nodes()                     # flap resets probation (quiet)
+    assert db.generation == g
+    assert db.scalar(
+        "SELECT probation FROM resource_health WHERE idResource="
+        "(SELECT idResource FROM resources WHERE hostname='h0')") == 0
+
+
+def test_repeat_flapper_is_quarantined_dead():
+    db, tr, ex = _monitored_cluster()
+    for _ in range(5):                     # each full flap costs net health
+        tr.failed_hosts.add("h0")
+        ex.monitor_nodes()
+        tr.failed_hosts.discard("h0")
+        ex.monitor_nodes()
+        ex.monitor_nodes()
+    assert db.scalar("SELECT state FROM resources WHERE hostname='h0'") \
+        == "Dead"
+    assert db.scalar("SELECT COUNT(*) FROM event_log WHERE message LIKE "
+                     "'nodes quarantined (flapping)%'") == 1
+    # quarantined: off the sweep, no resurrection, no generation churn
+    g = db.generation
+    ex.monitor_nodes()
+    ex.monitor_nodes()
+    assert db.scalar("SELECT state FROM resources WHERE hostname='h0'") \
+        == "Dead"
+    assert db.generation == g
+
+
+# ------------------------------------------------------ crash-orphan reaper
+def _scheduled_job(db, *, nb_nodes=1):
+    jid = api.oarsub(db, "x", nb_nodes=nb_nodes, max_time=600.0,
+                     clock=db.clock)
+    MetaScheduler(db, clock=db.clock).run()
+    assert jobstate.get_state(db, jid) == "toLaunch"
+    return jid
+
+
+def test_reaper_requeues_launching_orphan_once():
+    db = connect()
+    db.clock = lambda: now["t"]
+    now = {"t": 0.0}
+    api.add_resources(db, ["h0", "h1"])
+    reaper = recovery.RecoveryModule(db, clock=db.clock)
+    jid = _scheduled_job(db)
+    jobstate.set_state(db, jid, jobstate.LAUNCHING)   # crash leaves it here
+    assert reaper.reap() == []                        # lease still running
+    now["t"] = recovery.ORPHAN_LEASE + 1.0
+    assert reaper.reap() == [jid]
+    assert jobstate.get_state(db, jid) == "toLaunch"
+    assert reaper.reap() == []                        # re-leased: idempotent
+    ex = Executor(db, clock=db.clock, launcher=TaktukLauncher(SimTransport()),
+                  check_nodes=False)
+    assert ex.launch_pending() == [jid]               # exactly one launch
+    assert jobstate.get_state(db, jid) == "Running"
+    assert reaper.reap() == [] and reaper.stats["requeued"] == 1
+
+
+def test_reaper_rebuilds_inflight_set_from_store():
+    """The crash-restart contract: a *fresh* reaper (new process, same
+    store) adopts in-flight jobs from jobs.stateTime alone."""
+    db = connect()
+    now = {"t": 5.0}
+    db.clock = lambda: now["t"]
+    api.add_resources(db, ["h0"])
+    jid = _scheduled_job(db)
+    jobstate.set_state(db, jid, jobstate.LAUNCHING)
+    reaper = recovery.RecoveryModule(db, clock=db.clock)  # after the fact
+    assert reaper.next_deadline() == 5.0 + recovery.ORPHAN_LEASE
+    now["t"] = 5.0 + recovery.ORPHAN_LEASE
+    assert reaper.reap() == [jid]
+    assert jobstate.get_state(db, jid) == "toLaunch"
+
+
+def test_reaper_fails_orphan_whose_resources_are_lost():
+    db = connect()
+    now = {"t": 0.0}
+    db.clock = lambda: now["t"]
+    api.add_resources(db, ["h0", "h1"])
+    reaper = recovery.RecoveryModule(db, clock=db.clock)
+    jid = _scheduled_job(db)
+    jobstate.set_state(db, jid, jobstate.LAUNCHING)
+    db.execute("UPDATE resources SET state='Suspected' WHERE idResource IN "
+               "(SELECT idResource FROM assignments WHERE idJob=?)", (jid,))
+    now["t"] = recovery.ORPHAN_LEASE + 1.0
+    assert reaper.reap() == [jid]
+    assert jobstate.get_state(db, jid) == "Error"
+    assert db.scalar("SELECT message FROM jobs WHERE idJob=?", (jid,)) \
+        .startswith("orphaned")
+    assert db.scalar("SELECT COUNT(*) FROM assignments WHERE idJob=?",
+                     (jid,)) == 0
+    # the retry pass picks the orphan up under its backoff budget
+    (cid,) = recovery.resubmit_failed(db, clock=db.clock)
+    assert db.scalar("SELECT retries FROM jobs WHERE idJob=?", (cid,)) == 1
+
+
+def test_launcher_crash_orphan_converges_in_simulator():
+    """Mid-pass launcher crash with a job in Launching: the rebuilt plane's
+    reaper requeues it after the lease; both jobs finish, each launched
+    exactly once (the state machine plus the reaper's re-check forbid a
+    double launch)."""
+    sim = ClusterSimulator(n_nodes=2, weight=1)
+    sim.submit(0.0, duration=50.0, nb_nodes=1, max_time=100.0)
+    sim.submit(0.0, duration=50.0, nb_nodes=1, max_time=100.0)
+    sim.crash_module(0.0, "launcher", after=1)
+    recs = sim.run()
+    assert sim.restarts == 1
+    assert [r.state for r in recs] == ["Terminated", "Terminated"]
+    # the survivor launched immediately; the orphan waited out the lease
+    assert sorted(r.start for r in recs) == [0.0, recovery.ORPHAN_LEASE]
+    assert sim.central.recovery.stats["requeued"] == 1
+    assert sim.db.scalar("SELECT COUNT(*) FROM event_log WHERE "
+                         "message LIKE 'orphan past lease%'") == 1
+    assert sim.db.scalar("SELECT COUNT(*) FROM jobs WHERE state IN "
+                         "('toLaunch','Launching')") == 0
+
+
+def test_scheduler_crash_mid_pass_converges_in_simulator():
+    """Mid-pass scheduler crash right after marking a job toLaunch: the
+    rebuilt plane resumes from whatever was committed — no lease needed
+    (toLaunch is the launcher's input set), no job lost or doubled."""
+    sim = ClusterSimulator(n_nodes=2, weight=1)
+    sim.submit(5.0, duration=50.0, nb_nodes=1, max_time=100.0)
+    sim.submit(5.0, duration=50.0, nb_nodes=1, max_time=100.0)
+    sim.crash_module(5.0, "scheduler", after=1)
+    recs = sim.run()
+    assert sim.restarts == 1
+    assert [r.state for r in recs] == ["Terminated", "Terminated"]
+    assert [r.start for r in recs] == [5.0, 5.0]
+
+
+# ----------------------------------------------------------- chaos harness
+def test_chaos_trace_is_deterministic():
+    topo = [(f"h{i}", i // 8, f"sw{i // 8}") for i in range(32)]
+    kw = dict(horizon=5000.0, node_mtbf=2000.0, mttr=300.0, flappers=2,
+              crashes=((100.0, "scheduler", 1),))
+    a = make_chaos_trace(topo, seed=7, **kw)
+    b = make_chaos_trace(topo, seed=7, **kw)
+    assert a == b and a.events           # a value, replayable bit-for-bit
+    assert make_chaos_trace(topo, seed=8, **kw) != a
+    kinds = {e.kind for e in a.events}
+    assert kinds == {"fail", "revive", "crash"}
+    # flappers cycle deterministically on the fixed period (a switch blast
+    # may hit them on top — the flap schedule itself is a subset)
+    flap_times = {e.time for e in a.events
+                  if e.kind == "fail" and e.target == "h0"}
+    assert {120.0 * k for k in range(1, int(5000 / 120))} <= flap_times
+
+
+def test_chaos_replay_gives_identical_history():
+    def once():
+        sim = ClusterSimulator(n_nodes=8, weight=1)
+        for i in range(20):
+            sim.submit(i * 5.0, duration=30.0, nb_nodes=1, max_time=60.0)
+        trace = make_chaos_trace(sim.topology(), seed=3, horizon=400.0,
+                                 node_mtbf=600.0, mttr=120.0, flappers=1,
+                                 flap_period=100.0)
+        sim.inject_chaos(trace)
+        recs = sim.run()
+        return [(r.idJob, r.state, r.start, r.stop) for r in recs]
+    assert once() == once()
+
+
+# --------------------------------------------------------------- satellites
+def test_besteffort_resubmission_preserves_project():
+    """Regression: the clone used to default project to 'default', letting
+    resubmitted best-effort work escape its tenant's quota and karma."""
+    db = connect()
+    api.add_resources(db, ["h0"])
+    jid = api.oarsub(db, "sweep", queue="besteffort", user="bob",
+                     project="tenantB", max_time=60.0)
+    db.execute("UPDATE jobs SET state='Error', "
+               "message='preempted: needed by job 99' WHERE idJob=?", (jid,))
+    (cid,) = besteffort.resubmit_preempted(db, clock=lambda: 10.0)
+    row = db.query_one("SELECT user, project, bestEffort FROM jobs "
+                       "WHERE idJob=?", (cid,))
+    assert (row["user"], row["project"]) == ("bob", "tenantB")
+    assert row["bestEffort"] == 1
+
+
+def test_event_log_pruning_is_quiet_and_keeps_newest():
+    db = connect()
+    db.clock = lambda: 0.0
+    n0 = db.scalar("SELECT COUNT(*) FROM event_log")
+    for i in range(50):
+        db.log_event("t", "info", f"m{i}")
+    g = db.generation
+    deleted = db.prune_event_log(keep_rows=10)
+    assert deleted == n0 + 40
+    assert db.generation == g                       # retention is telemetry
+    kept = [r["message"] for r in db.query(
+        "SELECT message FROM event_log ORDER BY idEvent")]
+    assert kept == [f"m{i}" for i in range(40, 50)]
+    # age-based retention runs against the handle's clock (virtual time)
+    db.clock = lambda: 1000.0
+    for i in range(5):
+        db.log_event("t", "info", f"late{i}")
+    assert db.prune_event_log(keep_seconds=100.0) == 10
+    assert db.scalar("SELECT COUNT(*) FROM event_log") == 5
+    # the (module, ts) index the retention query leans on exists
+    assert db.scalar("SELECT COUNT(*) FROM sqlite_master WHERE type='index' "
+                     "AND name='idx_events_module_ts'") == 1
+
+
+def test_execute_quiet_and_statetime_stamp():
+    db = connect()
+    api.add_resources(db, ["h0"])
+    g = db.generation
+    db.execute_quiet("UPDATE resources SET mem_gb=123")
+    assert db.generation == g                       # wrote, did not bump
+    assert db.scalar("SELECT mem_gb FROM resources") == 123
+    db.clock = lambda: 42.0
+    jid = api.oarsub(db, "x", max_time=60.0, clock=db.clock)
+    jobstate.set_state(db, jid, jobstate.HOLD)
+    assert db.scalar("SELECT stateTime FROM jobs WHERE idJob=?", (jid,)) \
+        == 42.0

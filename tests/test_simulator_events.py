@@ -179,3 +179,45 @@ def test_crash_restart_falls_back_to_full_rebuild(tmp_path):
     central.tick()
     assert sched2.stats == {"passes": 1, "noop_passes": 0}   # full rebuild
     assert db2.scalar("SELECT state FROM jobs") == "Running"
+
+
+def test_crash_restart_with_launching_orphan_reaps_and_relaunches(tmp_path):
+    """Harder restart: the process dies with one job frozen in Launching and
+    one still toLaunch. The restarted plane launches the toLaunch job at
+    once (it is the launcher's input set); the Launching orphan must wait
+    out the reaper's lease, get pushed back along the recovery edge, and
+    then run — exactly once, with nothing left in flight."""
+    from repro.core import jobstate, recovery
+
+    path = str(tmp_path / "oar.db")
+    db = connect(path, fresh=True)
+    now = {"t": 0.0}
+    db.clock = lambda: now["t"]
+    api.add_resources(db, ["h0", "h1"])
+    j1 = api.oarsub(db, "x", max_time=60.0, clock=db.clock)
+    j2 = api.oarsub(db, "x", max_time=60.0, clock=db.clock)
+    MetaScheduler(db, clock=db.clock).run()       # both marked toLaunch
+    jobstate.set_state(db, j1, jobstate.LAUNCHING)   # ...then the plane dies
+    db.close()                                    # mid-launch
+
+    db2 = connect(path)
+    db2.clock = lambda: now["t"]
+    central = CentralModule(db2, clock=db2.clock,
+                            executor=Executor(db2, check_nodes=False))
+    central.tick()
+    # the orphan is adopted from the store scan, not relaunched early
+    assert db2.scalar("SELECT state FROM jobs WHERE idJob=?", (j1,)) \
+        == "Launching"
+    assert db2.scalar("SELECT state FROM jobs WHERE idJob=?", (j2,)) \
+        == "Running"
+    assert central.next_deadline(now["t"]) == recovery.ORPHAN_LEASE
+    now["t"] = recovery.ORPHAN_LEASE + 1.0
+    central.tick()                                # lease expired: reap pass
+    assert db2.scalar("SELECT state FROM jobs WHERE idJob=?", (j1,)) \
+        == "Running"
+    assert central.recovery.stats["requeued"] == 1
+    assert db2.scalar("SELECT COUNT(*) FROM jobs WHERE state IN "
+                      "('toLaunch','Launching')") == 0
+    # converged: another tick finds nothing in flight, nothing to redo
+    central.tick()
+    assert central.recovery.stats["requeued"] == 1
