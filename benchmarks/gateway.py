@@ -1,0 +1,254 @@
+"""Service-surface benchmark: the REST gateway under a submission burst.
+
+The figure-9 experiment re-run across REAL process boundaries: a
+``repro.serve.daemon`` subprocess (gateway + store-driven central module)
+over a file-backed WAL store, with this process playing a fleet of HTTP
+clients. Three measurements:
+
+* **streaming** — N single POST /jobs round-trips from a thread pool:
+  sustained submits/s and per-submit latency (p50/p95). Each submit rides
+  the gateway's group-commit batcher, so concurrent singles share
+  transactions.
+* **batch** — the same N jobs as client-side ``submit_many`` chunks: the
+  burst interface, one group commit per chunk. This is the headline
+  sustained rate (CI guards >= 1000 submits/s at N=1000).
+* **restart** — kill -9 the central daemon mid-pass (chaos hook after the
+  5th mark), restart it, and time convergence; records orphans/lost
+  (CI guards both at zero).
+
+End-to-end drain (submission -> Terminated across two processes) is
+recorded alongside for the ratio guard against the in-process burst
+baseline.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+from dataclasses import dataclass
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO_ROOT, "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+from repro.core.api import JobRequest                      # noqa: E402
+from repro.serve import HttpClusterClient                  # noqa: E402
+
+
+@dataclass
+class GatewayBurstResult:
+    n_jobs: int
+    submitters: int
+    stream_wall_s: float
+    stream_submits_per_s: float
+    stream_p50_ms: float
+    stream_p95_ms: float
+    batch_wall_s: float
+    batch_submits_per_s: float
+    e2e_wall_s: float
+    e2e_jobs_per_s: float
+
+
+@dataclass
+class GatewayRestartResult:
+    n_jobs: int
+    killed_mid_pass: bool
+    recovered_wall_s: float
+    terminated: int
+    orphans: int
+    lost: int
+
+
+class _Daemon:
+    """A repro.serve.daemon subprocess with ready-file handshake."""
+
+    def __init__(self, db_path: str, workdir: str, name: str, *extra: str):
+        self.ready_path = os.path.join(workdir, f"{name}.ready.json")
+        self.err = open(os.path.join(workdir, f"{name}.err"), "w")
+        argv = [sys.executable, "-m", "repro.serve.daemon", "--db", db_path,
+                "--ready-file", self.ready_path, *extra]
+        env = dict(os.environ, PYTHONPATH=SRC)
+        self.proc = subprocess.Popen(argv, env=env, stderr=self.err,
+                                     stdout=subprocess.DEVNULL)
+        deadline = time.time() + 20.0
+        while time.time() < deadline:
+            if os.path.exists(self.ready_path):
+                with open(self.ready_path) as fh:
+                    self.info = json.load(fh)
+                return
+            if self.proc.poll() is not None:
+                raise RuntimeError(f"daemon died at startup, see {self.err.name}")
+            time.sleep(0.05)
+        self.proc.kill()
+        raise RuntimeError("daemon not ready in time")
+
+    def stop(self) -> None:
+        if self.proc.poll() is None:
+            self.proc.terminate()
+            try:
+                self.proc.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                self.proc.kill()
+        self.err.close()
+
+
+def _drain(client: HttpClusterClient, total: int, timeout: float = 180.0) -> float:
+    t0 = time.perf_counter()
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        s = client.summary()
+        if s["states"].get("Terminated", 0) + s["states"].get("Error", 0) >= total:
+            return time.perf_counter() - t0
+        time.sleep(0.1)
+    raise RuntimeError(f"drain timeout: {client.summary()}")
+
+
+def run_gateway_burst(n_jobs: int, *, submitters: int = 8,
+                      n_nodes: int = 17, weight: int = 2,
+                      workdir: str | None = None) -> GatewayBurstResult:
+    workdir = workdir or tempfile.mkdtemp(prefix="bench_gateway_")
+    db_path = os.path.join(workdir, "store.db")
+    daemon = _Daemon(db_path, workdir, "all", "--fresh",
+                     "--listen", "127.0.0.1:0", "--instant-complete",
+                     "--scheduler-period", "0.3")
+    try:
+        addr = f"{daemon.info['host']}:{daemon.info['port']}"
+        boot = HttpClusterClient(addr)
+        boot.resize(add=[f"host{i}" for i in range(n_nodes)], weight=weight)
+
+        # --- streaming singles -------------------------------------------
+        per = n_jobs // submitters
+        lat: list[list[float]] = [[] for _ in range(submitters)]
+
+        def stream_worker(k: int) -> None:
+            hc = HttpClusterClient(addr)
+            for _ in range(per):
+                t0 = time.perf_counter()
+                hc.submit(JobRequest("date", walltime=60.0))
+                lat[k].append(time.perf_counter() - t0)
+
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=stream_worker, args=(k,))
+                   for k in range(submitters)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        stream_wall = time.perf_counter() - t0
+        n_streamed = per * submitters
+        e2e_wall = stream_wall + _drain(boot, n_streamed)
+        all_lat = sorted(x for lane in lat for x in lane)
+        p50 = all_lat[len(all_lat) // 2]
+        p95 = all_lat[int(0.95 * (len(all_lat) - 1))]
+
+        # --- client-side batches (the burst interface) -------------------
+        chunk = 50
+        per_batch = n_jobs // submitters // chunk or 1
+
+        def batch_worker() -> None:
+            hc = HttpClusterClient(addr)
+            for _ in range(per_batch):
+                hc.submit_many([JobRequest("date", walltime=60.0)] * chunk)
+
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=batch_worker)
+                   for _ in range(submitters)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        batch_wall = time.perf_counter() - t0
+        n_batched = per_batch * chunk * submitters
+        _drain(boot, n_streamed + n_batched)
+
+        return GatewayBurstResult(
+            n_jobs=n_streamed, submitters=submitters,
+            stream_wall_s=round(stream_wall, 3),
+            stream_submits_per_s=round(n_streamed / stream_wall, 1),
+            stream_p50_ms=round(p50 * 1e3, 2),
+            stream_p95_ms=round(p95 * 1e3, 2),
+            batch_wall_s=round(batch_wall, 3),
+            batch_submits_per_s=round(n_batched / batch_wall, 1),
+            e2e_wall_s=round(e2e_wall, 3),
+            e2e_jobs_per_s=round(n_streamed / e2e_wall, 1))
+    finally:
+        daemon.stop()
+
+
+def run_gateway_restart(n_jobs: int = 50, *, n_nodes: int = 8,
+                        workdir: str | None = None) -> GatewayRestartResult:
+    """Kill -9 the central daemon mid-pass, restart, time the convergence."""
+    workdir = workdir or tempfile.mkdtemp(prefix="bench_gateway_")
+    db_path = os.path.join(workdir, "restart.db")
+    gw = _Daemon(db_path, workdir, "gw", "--fresh", "--role", "gateway",
+                 "--listen", "127.0.0.1:0")
+    central_args = ("--role", "central", "--instant-complete",
+                    "--scheduler-period", "0.3", "--orphan-lease", "2")
+    c1 = _Daemon(db_path, workdir, "central1", *central_args,
+                 "--die-after-marks", "5")
+    c2 = None
+    try:
+        addr = f"{gw.info['host']}:{gw.info['port']}"
+        hc = HttpClusterClient(addr)
+        hc.resize(add=[f"host{i}" for i in range(n_nodes)], weight=2)
+        hc.submit_many([JobRequest("date", walltime=60.0)] * n_jobs)
+        c1.proc.wait(timeout=30)              # SIGKILLs itself mid-pass
+        killed = c1.proc.returncode == -signal.SIGKILL
+
+        t0 = time.perf_counter()
+        c2 = _Daemon(db_path, workdir, "central2", *central_args)
+        recovered = _drain(hc, n_jobs)
+        wall = time.perf_counter() - t0
+
+        s = hc.summary()
+        terminated = s["states"].get("Terminated", 0)
+        orphans = sum(s["states"].get(st, 0)
+                      for st in ("toLaunch", "Launching", "Running"))
+        lost = n_jobs - terminated - s["states"].get("Error", 0)
+        return GatewayRestartResult(
+            n_jobs=n_jobs, killed_mid_pass=killed,
+            recovered_wall_s=round(max(recovered, wall), 3),
+            terminated=terminated, orphans=orphans, lost=lost)
+    finally:
+        c1.stop()
+        if c2 is not None:
+            c2.stop()
+        gw.stop()
+
+
+def main(argv: list[str] | None = None, *, smoke: bool = False):
+    args = list(argv or [])
+    smoke = smoke or "--smoke" in args
+    n = 1000   # the acceptance size either way: the burst guard is at N=1000
+    print("# gateway burst: REST submissions against a live daemon process"
+          + (" [smoke]" if smoke else ""))
+    burst = run_gateway_burst(n)
+    print(f"N={burst.n_jobs} x{burst.submitters} threads | "
+          f"stream {burst.stream_submits_per_s:.0f}/s "
+          f"(p50 {burst.stream_p50_ms:.1f}ms p95 {burst.stream_p95_ms:.1f}ms) | "
+          f"batch {burst.batch_submits_per_s:.0f}/s | "
+          f"e2e {burst.e2e_jobs_per_s:.0f} jobs/s")
+    restart = run_gateway_restart(20 if smoke else 50)
+    print(f"restart: killed_mid_pass={restart.killed_mid_pass} "
+          f"recovered in {restart.recovered_wall_s:.1f}s | "
+          f"terminated {restart.terminated}/{restart.n_jobs} "
+          f"orphans={restart.orphans} lost={restart.lost}")
+    from dataclasses import asdict
+    from benchmarks.record import write_bench_sched
+    # burst fields flattened: record.py reads e2e_jobs_per_s at section top
+    write_bench_sched(gateway_results={**asdict(burst),
+                                       "restart": asdict(restart)},
+                      smoke=smoke)
+    return burst, restart
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, REPO_ROOT)
+    main(sys.argv[1:])

@@ -44,7 +44,7 @@ def write_bench_sched(path: str = BENCH_PATH, *, scale_results=None,
                       burst_results=None, hier_results=None,
                       trace_result=None, edf_passes=None, edf_workload=None,
                       fairshare_results=None, quota_pass=None,
-                      chaos_results=None,
+                      chaos_results=None, gateway_results=None,
                       smoke: bool | None = None) -> dict:
     """Merge suite results into BENCH_sched.json (section per suite, so
     scale, the hierarchical-request variant and burst can each emit
@@ -154,6 +154,24 @@ def write_bench_sched(path: str = BENCH_PATH, *, scale_results=None,
         # the failure-free run, and the health-gated pass keeps the >=5x
         # wall / >=10x SQL seed margins.
         payload["chaos_smoke" if smoke else "chaos"] = chaos_results
+    if gateway_results is not None:
+        # the service surface: sustained submits/s + p95 submit latency over
+        # the REST gateway against a real daemon process, end-to-end drain
+        # rate, and the kill-9/restart recovery record. Acceptance, guarded
+        # by the CI smoke check: batch-path submits/s >= 1000 at N=1000, the
+        # e2e drain within a sane ratio of the in-process burst baseline,
+        # and zero orphans / zero lost jobs across the daemon restart. The
+        # e2e ratio is computed against the burst section's N=1000 row when
+        # one is on record (in-process, in-memory store — the gateway adds
+        # HTTP, process hops and a file-backed WAL on top).
+        section = dict(gateway_results)
+        burst_key = "burst_smoke" if smoke else "burst"
+        n1000 = [b for b in payload.get(burst_key, [])
+                 if b.get("n_jobs") == 1000]
+        if n1000 and section.get("e2e_jobs_per_s"):
+            section["e2e_ratio_vs_inproc"] = round(
+                section["e2e_jobs_per_s"] / n1000[0]["jobs_per_s"], 3)
+        payload["gateway_smoke" if smoke else "gateway"] = section
     tmp = path + ".tmp"
     with open(tmp, "w") as fh:
         json.dump(payload, fh, indent=2, sort_keys=True)

@@ -20,6 +20,10 @@ Suites:
                  under injected node failures, flapping hosts and mid-pass
                  crash-restarts vs its failure-free twin, plus the
                  health-gated headline pass vs the frozen seed margins
+  gateway        beyond-paper — service surface: REST submission burst
+                 against a live daemon process over a file-backed WAL
+                 store (sustained submits/s, p95 submit latency, e2e
+                 drain) plus the kill-9/restart convergence record
 
 The scheduler-perf suites (scale, burst) additionally record their numbers
 in ``BENCH_sched.json`` (pass wall time, SQL queries per pass, speedup vs
@@ -33,11 +37,11 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import (burst, chaos, complexity, esp2, fairshare,
+from benchmarks import (burst, chaos, complexity, esp2, fairshare, gateway,
                         parallel_jobs, scale)
 
 SUITES = ["complexity", "features", "esp2", "burst", "parallel_jobs", "scale",
-          "fairshare", "chaos"]
+          "fairshare", "chaos", "gateway"]
 
 
 def run_features() -> None:
@@ -91,6 +95,8 @@ def main(argv: list[str] | None = None) -> None:
             fairshare.main(smoke=smoke)
         elif suite == "chaos":
             chaos.main(smoke=smoke)
+        elif suite == "gateway":
+            gateway.main(smoke=smoke)
         print(f"--- {suite} done in {time.perf_counter() - t:.1f}s")
     print(f"\nall suites done in {time.perf_counter() - t0:.1f}s")
 

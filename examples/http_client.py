@@ -1,0 +1,98 @@
+"""The service surface — the control plane as an always-on REST service.
+
+Spawns a real ``repro.serve.daemon`` subprocess (gateway + store-driven
+central module over one WAL-mode SQLite file), then drives it over HTTP
+with ``HttpClusterClient``: seed nodes, submit jobs one at a time and as a
+group-committed batch, watch the cluster drain, and exercise the typed
+error contract. Every HTTP call crosses a real process boundary; the two
+processes share nothing but the store.
+
+    PYTHONPATH=src python examples/http_client.py
+
+Point the client at an already-running daemon instead by replacing the
+spawn block with its host:port.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+from repro.core import JobRequest
+from repro.core.api import UnknownJob
+from repro.serve import HttpClusterClient
+
+
+def spawn_daemon(db_path: str, ready_path: str) -> subprocess.Popen:
+    """Start gateway + central in one child process; wait for its ready file."""
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.serve.daemon",
+         "--db", db_path, "--fresh",
+         "--listen", "127.0.0.1:0",          # port 0: pick an ephemeral port
+         "--ready-file", ready_path,
+         "--instant-complete",               # demo: jobs finish on launch
+         "--scheduler-period", "0.3"],
+        env=dict(os.environ, PYTHONPATH=os.environ.get("PYTHONPATH", "src")))
+    for _ in range(200):
+        if os.path.exists(ready_path):
+            return proc
+        if proc.poll() is not None:
+            raise RuntimeError("daemon failed to start")
+        time.sleep(0.05)
+    raise RuntimeError("daemon not ready in time")
+
+
+def main() -> None:
+    workdir = tempfile.mkdtemp(prefix="oard_example_")
+    ready = os.path.join(workdir, "ready.json")
+    daemon = spawn_daemon(os.path.join(workdir, "oar.db"), ready)
+    try:
+        with open(ready) as fh:
+            info = json.load(fh)
+        addr = f"{info['host']}:{info['port']}"
+        print(f"daemon pid={info['pid']} listening on {addr}")
+
+        client = HttpClusterClient(addr)
+        client.resize(add=[f"host{i}" for i in range(8)], weight=2)
+        print(f"cluster: {len(client.nodes())} nodes")
+
+        # single submissions — each rides the gateway's group-commit batcher
+        first = client.submit(JobRequest("train.py",
+                                         request="/host=4", walltime=600.0))
+        print(f"submitted job {first.id}: state={first.state} "
+              f"request={first.request!r}")
+
+        # bulk path: one HTTP round-trip, one transaction for the whole batch
+        batch = client.submit_many([JobRequest("date", walltime=60.0)
+                                    for _ in range(50)])
+        print(f"batched {len(batch)} jobs in one group commit "
+              f"(ids {batch[0].id}..{batch[-1].id})")
+
+        # the central process notices the store moved and drains the backlog
+        deadline = time.time() + 30
+        while time.time() < deadline:
+            states = client.summary()["states"]
+            if states.get("Terminated", 0) >= 51:
+                break
+            time.sleep(0.2)
+        print(f"drained: {client.summary()['states']}")
+
+        # the error contract: server-side types cross the wire intact
+        try:
+            client.stat(99999)
+        except UnknownJob as exc:
+            print(f"typed error over HTTP: UnknownJob({exc})")
+
+        health = client.health()
+        print(f"health: generation={health['generation']} "
+              f"submitted={health['stats']['submitted']} "
+              f"batches={health['stats']['batches']}")
+    finally:
+        daemon.terminate()
+        daemon.wait(timeout=10)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,8 @@ experiments; `api` is the oarsub/oardel/oarstat command set.
 """
 
 from repro.core.db import Database, connect
-from repro.core.api import (oarsub, oardel, oarstat, oarhold, oarresume,
+from repro.core.api import (oarsub, oarsub_batch, oardel, oarstat, oarhold,
+                            oarresume,
                             oarnodes, add_resources, remove_resources,
                             set_queue, set_quota, list_quotas, drop_quota,
                             AdmissionError, ClusterClient,
@@ -25,7 +26,8 @@ from repro.core.simulator import (ClusterSimulator, ChaosEvent, ChaosTrace,
 from repro.core.recovery import CrashRestart, RecoveryModule
 
 __all__ = [
-    "Database", "connect", "oarsub", "oardel", "oarstat", "oarhold",
+    "Database", "connect", "oarsub", "oarsub_batch", "oardel", "oarstat",
+    "oarhold",
     "oarresume", "oarnodes", "add_resources", "remove_resources", "set_queue",
     "set_quota", "list_quotas", "drop_quota",
     "AdmissionError", "CentralModule", "MetaScheduler", "Executor",

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 from typing import Any
 
-__all__ = ["AdmissionError", "run_admission", "add_rule"]
+__all__ = ["AdmissionError", "run_admission", "load_rules", "add_rule"]
 
 
 class AdmissionError(Exception):
@@ -76,17 +76,32 @@ def _cluster_ctx(db) -> dict[str, Any]:
     }
 
 
-def run_admission(db, job: dict[str, Any]) -> dict[str, Any]:
+def load_rules(db) -> list[str]:
+    """The rule texts in execution order — pre-fetch for batch admission."""
+    return [r["rule"] for r in
+            db.query("SELECT rule FROM admission_rules ORDER BY priority, idRule")]
+
+
+def run_admission(db, job: dict[str, Any], *, rules: list[str] | None = None,
+                  ctx: dict[str, Any] | None = None) -> dict[str, Any]:
     """Run every rule (priority order) over the submission dict, in place.
 
     Raises :class:`AdmissionError` if any rule rejects. Returns the
     (mutated) job dict on acceptance.
+
+    ``rules``/``ctx`` let a batch admission pass (the gateway's group
+    commit) amortise the per-submission reads: fetch once via
+    :func:`load_rules`/:func:`_cluster_ctx`, validate N jobs against that
+    snapshot. Single submissions re-read both every call so runtime rule
+    edits keep applying immediately — the DB stays the configuration.
     """
-    rules = db.query("SELECT rule FROM admission_rules ORDER BY priority, idRule")
-    ctx = _cluster_ctx(db)
+    if rules is None:
+        rules = load_rules(db)
+    if ctx is None:
+        ctx = _cluster_ctx(db)
     ns = {"job": job, "ctx": ctx, "AdmissionError": AdmissionError}
-    for row in rules:
-        code = _compiled(row["rule"])
+    for rule in rules:
+        code = _compiled(rule)
         try:
             exec(code, {"__builtins__": _SAFE_BUILTINS}, ns)  # noqa: S102 — by design (§2.1)
         except AdmissionError:

@@ -184,6 +184,33 @@ class CentralModule:
             self.tick()
             _time.sleep(poll)
 
+    def run_store_driven(self, *, poll: float = 0.02,
+                         until: Callable[[], bool] | None = None) -> None:
+        """Daemon loop for the multi-process deployment: the store IS the bus.
+
+        In-process deployments wake the automaton through notify hooks; a
+        gateway in ANOTHER process cannot reach those. Instead this loop
+        watches ``db.generation`` — engine-backed, so any real cross-process
+        commit moves it (telemetry writes don't) — and treats a change as
+        the content-free notification of §2.2: it cannot say *what*
+        changed, so it pends the widest tag ("cancel" → cancel + resubmit +
+        scheduler, with the launch leg riding on an acting scheduler pass).
+        Each generation poll is a ~1 µs data_version check, no SQL — an
+        idle store costs nothing to watch, and the no-op memo keeps even a
+        spurious wake-up at 0 SQL. Periodic redundancy still applies
+        underneath, exactly as in :meth:`run_forever`.
+        """
+        gen = self.db.generation
+        while until is None or not until():
+            g = self.db.generation
+            if g != gen:
+                gen = g
+                self.notify("cancel")   # widest fan-out: store can't say what
+            if self._pending or self.periodic_due(self.clock()):
+                self.tick()
+                gen = self.db.generation   # our own pass moved it; not news
+            _time.sleep(poll)
+
     @property
     def has_pending(self) -> bool:
         return bool(self._pending)

@@ -38,7 +38,8 @@ class Database:
     is made of semantics description for the tables and relations").
     """
 
-    def __init__(self, path: str = ":memory:", *, timeout: float = 30.0):
+    def __init__(self, path: str = ":memory:", *, timeout: float = 30.0,
+                 busy_retry_s: float = 0.1):
         self.path = path
         self._lock = threading.RLock()
         # check_same_thread=False: the central module's listener thread and
@@ -46,6 +47,14 @@ class Database:
         self._conn = sqlite3.connect(path, timeout=timeout, check_same_thread=False)
         self._conn.row_factory = sqlite3.Row
         self._conn.execute("PRAGMA foreign_keys=ON")
+        # busy handling is explicit, not just sqlite3's connect timeout: a
+        # file-backed store is shared by several OS processes (gateway,
+        # central daemon, clients), and concurrent writers must wait for the
+        # WAL write lock instead of raising immediately. On top of the
+        # engine-level wait, execute/executemany/commit retry ONCE after
+        # ``busy_retry_s`` — a writer stuck behind a long pass fails soft.
+        self._conn.execute(f"PRAGMA busy_timeout={int(timeout * 1000)}")
+        self.busy_retry_s = busy_retry_s
         if path != ":memory:":
             self._conn.execute("PRAGMA journal_mode=WAL")
             self._conn.execute("PRAGMA synchronous=NORMAL")
@@ -54,18 +63,102 @@ class Database:
         self._txn_depth = 0           # open transaction() contexts (nesting)
         self._txn_changes0 = 0        # total_changes at outermost txn entry
         self.query_count = 0          # §3.2.2: SQL load accounting
-        # Data generation: bumped whenever a statement actually modified rows
-        # (INSERT/UPDATE/DELETE on any state table — jobs, resources,
-        # assignments, gantt, queues...). Readers snapshot it to detect "has
-        # anything changed since I last looked" in O(1): the meta-scheduler's
-        # dirty-flag fast path reuses its previous pass verbatim while the
-        # generation is unchanged. Deliberately NOT bumped by log_event —
-        # appending to the event log is observability, not state, and the
-        # scheduler logs its own passes (a bump there would disarm the very
-        # fast path it feeds). Per-handle and in-memory only: a reopened
-        # store starts at 0, so every consumer's first look is a rebuild —
-        # exactly the paper's stateless-recovery contract.
-        self.generation = 0
+        # Data generation (engine-backed, see the `generation` property):
+        # local cache of the store-wide 'generation' counters row, kept
+        # current by local bumps and a PRAGMA data_version gate for writes
+        # from OTHER handles/processes. Starts from the store's value so a
+        # handle's first external sync never masquerades as a real change.
+        self._gen = 0
+        self._gen_dv = self._conn.execute("PRAGMA data_version").fetchone()[0]
+        try:
+            row = self._conn.execute(
+                "SELECT value FROM counters WHERE name='generation'").fetchone()
+            if row is not None:
+                self._gen = row[0]
+        except sqlite3.OperationalError:
+            pass   # store predates the counters table (or is brand new)
+
+    # ----------------------------------------------------------- generation
+    @property
+    def generation(self) -> int:
+        """Monotonic data-generation counter over the WHOLE store.
+
+        Changes whenever a statement actually modified rows (INSERT/UPDATE/
+        DELETE on any state table — jobs, resources, assignments, gantt,
+        queues…) through ANY handle in ANY process. Readers snapshot it to
+        detect "has anything changed since I last looked" in O(1): the
+        meta-scheduler's dirty-flag fast path reuses its previous pass
+        verbatim while the generation is unchanged.
+
+        Engine-backed (the PR-4 follow-on): every row-modifying commit also
+        bumps the ``counters`` row ``'generation'`` inside the same
+        transaction, and this property gates a re-read of that row behind
+        ``PRAGMA data_version`` — which only moves when *another* connection
+        commits. Cost profile the no-op memo relies on:
+
+        * idle store → one data_version poll (~1 µs, no SQL query, not
+          counted in ``query_count``);
+        * another process committed → ONE read of the counters row decides
+          whether it was a real write (row advanced → generation moves) or
+          telemetry (``execute_quiet`` health scores, ``log_event``,
+          ``prune_event_log`` — none bump the row, so the memo stays armed
+          even when the writer lives in a different process);
+        * local writes bump the cache directly (no poll needed — one's own
+          commits never move one's own data_version).
+
+        Deliberately NOT bumped by ``log_event``/``execute_quiet``:
+        appending observability must not disarm the fast path it feeds. The
+        absolute value is meaningless across handles; only change detection
+        on one handle is the contract (a fresh handle seeds from the store,
+        so its first look at a reopened store is a rebuild — the paper's
+        stateless-recovery contract).
+        """
+        with self._lock:
+            dv = self._conn.execute("PRAGMA data_version").fetchone()[0]
+            if dv != self._gen_dv:
+                self._gen_dv = dv
+                try:
+                    row = self._conn.execute(
+                        "SELECT value FROM counters WHERE name='generation'"
+                    ).fetchone()
+                except sqlite3.OperationalError:
+                    row = None
+                if row is not None:
+                    self._gen = max(self._gen, row[0])
+                else:
+                    # legacy store without the counter: any external commit
+                    # must invalidate (conservative — quiet writes included)
+                    self._gen += 1
+            return self._gen
+
+    def _bump_generation_in_txn(self) -> None:
+        """Advance the engine-side counter INSIDE the currently-open write
+        transaction (callers commit right after, then advance the local
+        cache). Seeds the row if the store predates it — keeping the
+        invariant engine >= local cache that cross-handle sync relies on."""
+        try:
+            self._conn.execute(
+                "INSERT INTO counters(name, value) VALUES ('generation', ?) "
+                "ON CONFLICT(name) DO UPDATE SET value=value+1",
+                (self._gen + 1,))
+        except sqlite3.OperationalError:
+            pass   # no counters table at all: in-process detection still works
+
+    def _retry_busy(self, fn, *, rollback: bool = False):
+        """Run ``fn`` retrying ONCE on SQLITE_BUSY/locked — the soft-fail
+        contract for concurrent writers sharing the WAL store. ``rollback``
+        discards a partially-applied autocommit unit (executemany) before
+        the retry re-runs it from the top."""
+        try:
+            return fn()
+        except sqlite3.OperationalError as exc:
+            msg = str(exc)
+            if "locked" not in msg and "busy" not in msg:
+                raise
+            if rollback and self._txn_depth == 0 and self._conn.in_transaction:
+                self._conn.rollback()
+            time.sleep(self.busy_retry_s)
+            return fn()
 
     # ------------------------------------------------------------------ DDL
     def create_schema(self) -> None:
@@ -100,8 +193,14 @@ class Database:
                     # sqlite3 only implicitly BEGINs before DML; start the
                     # unit explicitly so a nested SAVEPOINT opened before our
                     # first write rides inside it (its RELEASE must not
-                    # commit)
-                    cur.execute("BEGIN")
+                    # commit). IMMEDIATE, not deferred: transaction() is the
+                    # WRITE unit, and a deferred BEGIN that reads first then
+                    # writes after another process committed dies with
+                    # SQLITE_BUSY_SNAPSHOT — an instant "database is locked"
+                    # the busy_timeout never applies to. Taking the write
+                    # lock up front makes concurrent writers queue on the
+                    # busy handler instead.
+                    self._retry_busy(lambda: cur.execute("BEGIN IMMEDIATE"))
             except BaseException:
                 cur.close()  # setup failed: depth untouched, handle usable
                 raise
@@ -126,9 +225,14 @@ class Database:
                 if sp:
                     cur.execute(f"RELEASE {sp}")
                 else:
-                    self._conn.commit()  # outermost context commits the unit
-                    if self._conn.total_changes != self._txn_changes0:
-                        self.generation += 1
+                    changed = self._conn.total_changes != self._txn_changes0
+                    if changed:
+                        # bump rides INSIDE the unit so other processes see
+                        # state + counter move atomically
+                        self._bump_generation_in_txn()
+                    self._retry_busy(self._conn.commit)  # outermost commit
+                    if changed:
+                        self._gen += 1
             finally:
                 self._txn_depth -= 1
                 cur.close()
@@ -141,23 +245,31 @@ class Database:
         with self._lock:
             self.query_count += 1
             changes0 = self._conn.total_changes
-            cur = self._conn.execute(sql, params)
+            cur = self._retry_busy(lambda: self._conn.execute(sql, params))
             if self._txn_depth == 0:
+                changed = self._conn.total_changes != changes0
+                if changed:
+                    self._bump_generation_in_txn()
                 if self._conn.in_transaction:
-                    self._conn.commit()
-                if self._conn.total_changes != changes0:
-                    self.generation += 1
+                    self._retry_busy(self._conn.commit)
+                if changed:
+                    self._gen += 1
             return cur
 
     def executemany(self, sql: str, seq: Iterable[Sequence[Any]]) -> None:
         with self._lock:
             self.query_count += 1
             changes0 = self._conn.total_changes
-            self._conn.executemany(sql, seq)
+            seq = seq if isinstance(seq, (list, tuple)) else list(seq)
+            self._retry_busy(lambda: self._conn.executemany(sql, seq),
+                             rollback=True)
             if self._txn_depth == 0:
-                self._conn.commit()
-                if self._conn.total_changes != changes0:
-                    self.generation += 1
+                changed = self._conn.total_changes != changes0
+                if changed:
+                    self._bump_generation_in_txn()
+                self._retry_busy(self._conn.commit)
+                if changed:
+                    self._gen += 1
 
     def execute_quiet(self, sql: str, params: Sequence[Any] | dict = ()) -> sqlite3.Cursor:
         """Write WITHOUT bumping the data generation.
@@ -173,9 +285,9 @@ class Database:
         transactions for that reason)."""
         with self._lock:
             self.query_count += 1
-            cur = self._conn.execute(sql, params)
+            cur = self._retry_busy(lambda: self._conn.execute(sql, params))
             if self._txn_depth == 0 and self._conn.in_transaction:
-                self._conn.commit()
+                self._retry_busy(self._conn.commit)
             return cur
 
     def query(self, sql: str, params: Sequence[Any] | dict = ()) -> list[sqlite3.Row]:
@@ -234,12 +346,12 @@ class Database:
     def log_event(self, module: str, level: str, message: str, job_id: int | None = None) -> None:
         clock = getattr(self, "clock", None) or time.time
         with self._lock:
-            self._conn.execute(
+            self._retry_busy(lambda: self._conn.execute(
                 "INSERT INTO event_log(ts, module, level, job_id, message) VALUES (?,?,?,?,?)",
                 (clock(), module, level, job_id, message),
-            )
+            ))
             if self._txn_depth == 0:
-                self._conn.commit()
+                self._retry_busy(self._conn.commit)
 
     def prune_event_log(self, *, keep_seconds: float | None = None,
                         keep_rows: int | None = None) -> int:

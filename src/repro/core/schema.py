@@ -163,8 +163,22 @@ CREATE TABLE IF NOT EXISTS resource_health (
 )
 """
 
+# Service tier (core/db.py): engine-backed coordination counters shared by
+# every process on the store. The 'generation' row is bumped inside every
+# row-modifying commit (quiet telemetry writes and the event log excepted)
+# so a scheduler in ANOTHER process can tell "did anything I care about
+# change" without rescanning state tables — the cross-process form of the
+# in-memory Database.generation memo. Readers gate the row behind
+# PRAGMA data_version, so an idle store costs zero SQL to watch.
+COUNTERS = """
+CREATE TABLE IF NOT EXISTS counters (
+    name  TEXT PRIMARY KEY,
+    value INTEGER NOT NULL DEFAULT 0
+)
+"""
+
 ALL_TABLES = [JOBS, RESOURCES, ASSIGNMENTS, QUEUES, ADMISSION_RULES, GANTT,
-              EVENT_LOG, QUOTA_RULES, ACCOUNTING, RESOURCE_HEALTH]
+              EVENT_LOG, QUOTA_RULES, ACCOUNTING, RESOURCE_HEALTH, COUNTERS]
 
 ALL_INDEXES = [
     "CREATE INDEX IF NOT EXISTS idx_jobs_state ON jobs(state)",
@@ -232,6 +246,8 @@ def apply_migrations(db) -> None:
     with db.transaction() as cur:
         for ddl in ALL_TABLES:
             cur.execute(ddl)
+        cur.execute("INSERT OR IGNORE INTO counters(name, value) "
+                    "VALUES ('generation', 0)")
     have_q = {r["name"] for r in db.query("PRAGMA table_info(queues)")}
     missing_q = [ddl for col, ddl in QUEUES_MIGRATIONS if col not in have_q]
     if missing_q:
@@ -381,6 +397,8 @@ DEFAULT_QUEUES = [
 
 def install_defaults(db) -> None:
     with db.transaction() as cur:
+        cur.execute("INSERT OR IGNORE INTO counters(name, value) "
+                    "VALUES ('generation', 0)")
         for prio, rule in DEFAULT_ADMISSION_RULES:
             cur.execute(
                 "INSERT INTO admission_rules(priority, rule) VALUES (?,?)", (prio, rule)

@@ -1,2 +1,27 @@
-from repro.serve.engine import ServeEngine, Request
-__all__ = ["ServeEngine", "Request"]
+"""repro.serve — always-on service surfaces.
+
+Two unrelated tiers share this package:
+
+* the data-plane serving engine (``engine``): JAX-backed, imported lazily
+  so the control-plane service surface stays importable on jax-less hosts;
+* the control-plane service surface (``gateway``/``daemon``/``client``):
+  the OAR deployment as separate OS processes — a REST gateway, a central
+  daemon, and an HTTP client — coordinating ONLY through one WAL store.
+"""
+
+from repro.serve.client import HttpClusterClient, GatewayError
+from repro.serve.gateway import Gateway
+
+__all__ = ["ServeEngine", "Request", "Gateway",
+           "HttpClusterClient", "GatewayError"]
+
+_LAZY = {"ServeEngine", "Request"}
+
+
+def __getattr__(name):
+    # the serving engine pulls in jax; defer that import until first touch
+    # so `from repro.serve import Gateway` works on control-plane-only hosts
+    if name in _LAZY:
+        from repro.serve import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,183 @@
+"""``repro-oard`` — the multi-process OAR deployment entrypoint.
+
+One command, three roles over ONE WAL store:
+
+* ``--role central`` — the server daemon: :class:`CentralModule`
+  (meta-scheduler + launcher + recovery reaper) on its own ``Database``
+  handle, driven by :meth:`CentralModule.run_store_driven` — it watches the
+  engine-backed generation counter and wakes on any real commit from any
+  process, with periodic redundancy underneath (§2.2).
+* ``--role gateway`` — the REST submission surface
+  (:class:`repro.serve.Gateway`) on its own handle.
+* ``--role all`` (default) — both in one process (gateway HTTP threads +
+  central loop thread), still coordinating with any OTHER process purely
+  through the store.
+
+Kill any process with ``kill -9`` at any instant and restart it: the store
+is the only state, so the next pass rebuilds everything and the recovery
+reaper requeues jobs orphaned mid-launch (the paper's robustness claim,
+exercised across real process boundaries in tests/test_gateway.py).
+
+Chaos seams for those tests: ``--die-after-marks N`` arms the scheduler's
+chaos hook to SIGKILL the process after the Nth job is marked toLaunch —
+a deterministic mid-pass crash with jobs half-assigned.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import sys
+import threading
+
+from repro.core import (CentralModule, Executor, MetaScheduler,
+                        RecoveryModule, SimTransport, TaktukLauncher, connect)
+
+__all__ = ["main", "make_central"]
+
+
+def make_central(db, *, orphan_lease: float | None = None,
+                 scheduler_period: float = 2.0,
+                 instant_complete: bool = False) -> CentralModule:
+    """Build the server-side control plane on a store handle.
+
+    ``instant_complete`` wires the figure-9 payload: every launched job
+    completes immediately (the ``date`` job of the paper's burst
+    experiment) — benchmarks and CI use it so gateway throughput measures
+    the system, not the sleep. The SimTransport launcher keeps deploys
+    in-process and instant; a real deployment swaps the transport.
+    """
+    executor = Executor(db, launcher=TaktukLauncher(SimTransport(latency=0.0)),
+                        check_nodes=False)
+    if instant_complete:
+        real_launch = executor.launch_pending
+
+        def launch_and_finish():
+            launched = real_launch()
+            for jid in launched:
+                executor.complete(jid, ok=True, message="date")
+            return launched
+
+        executor.launch_pending = launch_and_finish  # type: ignore[assignment]
+    recovery = RecoveryModule(
+        db, **({"lease": orphan_lease} if orphan_lease is not None else {}))
+    return CentralModule(
+        db, executor=executor, scheduler=MetaScheduler(db), recovery=recovery,
+        periods={"scheduler": scheduler_period, "launcher": scheduler_period,
+                 "cancel": scheduler_period * 5,
+                 "resubmit": scheduler_period,
+                 "reaper": max(1.0, (orphan_lease or 60.0) / 2),
+                 "monitor": 3600.0})
+
+
+def _arm_kill_after_marks(central: CentralModule, n_marks: int) -> None:
+    """SIGKILL this process after the scheduler marks its Nth job toLaunch —
+    mid-pass, with the store holding a half-launched batch. The recovery
+    tier must make this invisible; tests assert it does."""
+    count = [0]
+
+    def hook(site: str) -> None:
+        if site == "sched:marked":
+            count[0] += 1
+            if count[0] >= n_marks:
+                os.kill(os.getpid(), signal.SIGKILL)
+
+    central.scheduler.chaos_hook = hook
+
+
+def _parse_listen(text: str) -> tuple[str, int]:
+    host, _, port = text.rpartition(":")
+    return host or "127.0.0.1", int(port)
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="repro-oard",
+        description="OAR control-plane daemon: REST gateway and/or central "
+                    "module over one shared WAL store")
+    parser.add_argument("--db", required=True,
+                        help="path to the shared SQLite store")
+    parser.add_argument("--listen", default="127.0.0.1:6668",
+                        help="gateway HOST:PORT (port 0 = ephemeral)")
+    parser.add_argument("--role", choices=("all", "central", "gateway"),
+                        default="all")
+    parser.add_argument("--fresh", action="store_true",
+                        help="start from an empty store")
+    parser.add_argument("--poll", type=float, default=0.02,
+                        help="central store-watch poll interval (s)")
+    parser.add_argument("--orphan-lease", type=float, default=None,
+                        help="seconds before a mid-launch job is reaped")
+    parser.add_argument("--scheduler-period", type=float, default=2.0,
+                        help="periodic-redundancy floor for scheduler/launcher")
+    parser.add_argument("--max-batch", type=int, default=256,
+                        help="gateway group-commit cap")
+    parser.add_argument("--instant-complete", action="store_true",
+                        help="complete jobs at launch (burst benchmarking)")
+    parser.add_argument("--ready-file", default=None,
+                        help="write {host,port,pid} JSON here once serving")
+    parser.add_argument("--die-after-marks", type=int, default=None,
+                        help="chaos: SIGKILL self mid-pass after N jobs "
+                             "marked toLaunch")
+    args = parser.parse_args(argv)
+
+    db = connect(args.db, fresh=args.fresh)
+    stop = threading.Event()
+    signal.signal(signal.SIGTERM, lambda *_: stop.set())
+    signal.signal(signal.SIGINT, lambda *_: stop.set())
+
+    central = None
+    central_thread = None
+    if args.role in ("all", "central"):
+        # the central module gets its own handle even in-process: one
+        # writer identity per module, exactly one store between them
+        # (connect, not bare Database: the accounting observer must ride
+        # the handle that performs the state transitions)
+        central_db = db if args.role == "central" else connect(args.db)
+        central = make_central(
+            central_db, orphan_lease=args.orphan_lease,
+            scheduler_period=args.scheduler_period,
+            instant_complete=args.instant_complete)
+        if args.die_after_marks is not None:
+            _arm_kill_after_marks(central, args.die_after_marks)
+        central_thread = threading.Thread(
+            target=central.run_store_driven,
+            kwargs={"poll": args.poll, "until": stop.is_set},
+            name="central", daemon=True)
+        central_thread.start()
+
+    server = None
+    if args.role in ("all", "gateway"):
+        from repro.serve.gateway import Gateway
+        gateway = Gateway(db, max_batch=args.max_batch)
+        host, port = _parse_listen(args.listen)
+        server = gateway.serve(host, port)
+        host, port = server.server_address[:2]
+        threading.Thread(target=server.serve_forever, daemon=True).start()
+    else:
+        host, port = None, None
+
+    if args.ready_file:
+        tmp = args.ready_file + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump({"host": host, "port": port, "pid": os.getpid()}, fh)
+        os.replace(tmp, args.ready_file)   # atomic: readers never see half
+    print(f"repro-oard: role={args.role} db={args.db} pid={os.getpid()}"
+          + (f" listening on {host}:{port}" if server else ""),
+          file=sys.stderr)
+
+    try:
+        while not stop.is_set():
+            stop.wait(0.2)
+    finally:
+        if server is not None:
+            gateway.stop()
+        if central_thread is not None:
+            central_thread.join(timeout=5.0)
+        db.close()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

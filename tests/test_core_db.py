@@ -86,3 +86,48 @@ def test_event_log_is_queryable():
     jid = oarsub(db, "x", user="alice")
     rows = db.query("SELECT * FROM event_log WHERE job_id=?", (jid,))
     assert rows and rows[0]["module"] == "oarsub"
+
+
+def test_wal_busy_writer_retries_and_succeeds(tmp_path):
+    """Two handles, one WAL write lock: a writer that hits the lock while a
+    slow transaction holds it must wait (busy_timeout) / retry once
+    (_retry_busy) and land — not raise — the fail-soft contract concurrent
+    control-plane processes rely on."""
+    import threading
+    import time as _t
+    from repro.core import Database
+    path = str(tmp_path / "busy.db")
+    db = connect(path)
+    add_resources(db, ["h0"])
+    # short engine wait so the test exercises the retry layer quickly
+    other = Database(path, timeout=0.05, busy_retry_s=0.15)
+    hold = threading.Event()
+    def long_txn():
+        with db.transaction() as cur:
+            cur.execute("UPDATE resources SET weight=5 WHERE hostname='h0'")
+            hold.set()
+            _t.sleep(0.25)        # longer than other's engine timeout alone
+    t = threading.Thread(target=long_txn)
+    t.start()
+    hold.wait(timeout=5.0)
+    other.execute("INSERT INTO resources(hostname) VALUES ('h1')")
+    t.join()
+    assert db.scalar("SELECT COUNT(*) FROM resources") == 2
+    assert db.scalar("SELECT weight FROM resources WHERE hostname='h0'") == 5
+    other.close()
+    db.close()
+
+
+def test_generation_survives_reopen_monotonically(tmp_path):
+    """Engine-backed generation: a fresh handle seeds from the counters row,
+    so it starts where the store left off instead of at zero (change
+    detection across a reopen stays monotonic)."""
+    path = str(tmp_path / "gen.db")
+    db = connect(path)
+    add_resources(db, ["h0"])
+    g = db.generation
+    assert g > 0
+    db.close()
+    db2 = connect(path)
+    assert db2.generation >= g
+    db2.close()

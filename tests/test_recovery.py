@@ -156,6 +156,39 @@ def test_down_host_does_not_churn_generation_every_sweep():
         "(SELECT idResource FROM resources WHERE hostname='h0')") == 0
 
 
+def test_quiet_writes_from_second_handle_stay_invisible(tmp_path):
+    """The multi-process form of the churn guarantee: a monitor running in
+    ANOTHER process (second handle on the same WAL store) writes health
+    telemetry via execute_quiet and appends to the event log — the
+    scheduler handle's generation must not move (its no-op memo stays
+    armed). A real state write through the second handle must move it."""
+    from repro.core import Database
+    path = str(tmp_path / "store.db")
+    db = connect(path)
+    api.add_resources(db, ["h0", "h1"])
+    g = db.generation
+
+    other = Database(path)
+    other.execute_quiet(
+        "INSERT INTO resource_health(idResource, health) VALUES (1, 0.5)")
+    other.execute_quiet(
+        "UPDATE resource_health SET health=0.3 WHERE idResource=1")
+    other.log_event("monitor", "info", "sweep")
+    other.prune_event_log(keep_rows=1000)
+    assert db.generation == g          # telemetry is not news
+
+    other.execute("UPDATE resources SET state='Suspected' "
+                  "WHERE hostname='h0'")
+    assert db.generation != g          # a state write is
+    # and the first handle's own writes are news to the second
+    g2 = other.generation
+    with db.transaction() as cur:
+        cur.execute("UPDATE resources SET state='Alive' WHERE hostname='h0'")
+    assert other.generation != g2
+    other.close()
+    db.close()
+
+
 def test_repeat_flapper_is_quarantined_dead():
     db, tr, ex = _monitored_cluster()
     for _ in range(5):                     # each full flap costs net health
