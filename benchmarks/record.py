@@ -45,6 +45,7 @@ def write_bench_sched(path: str = BENCH_PATH, *, scale_results=None,
                       trace_result=None, edf_passes=None, edf_workload=None,
                       fairshare_results=None, quota_pass=None,
                       chaos_results=None, gateway_results=None,
+                      fanout_results=None, swf_results=None,
                       smoke: bool | None = None) -> dict:
     """Merge suite results into BENCH_sched.json (section per suite, so
     scale, the hierarchical-request variant and burst can each emit
@@ -172,6 +173,23 @@ def write_bench_sched(path: str = BENCH_PATH, *, scale_results=None,
             section["e2e_ratio_vs_inproc"] = round(
                 section["e2e_jobs_per_s"] / n1000[0]["jobs_per_s"], 3)
         payload["gateway_smoke" if smoke else "gateway"] = section
+    if fanout_results is not None:
+        # parallel launcher fan-out: serial vs thread-pool deploy wall time
+        # through a genuinely blocking transport, plus the determinism
+        # guarantee. Acceptance, guarded by the CI trace-replay-smoke check:
+        # the parallel path cuts deploy wall time >= 3x and returns a
+        # DeploymentReport byte-identical to the serial tree.
+        payload["launch_fanout_smoke" if smoke else "launch_fanout"] = \
+            [dataclasses.asdict(r) for r in fanout_results]
+    if swf_results is not None:
+        # real-trace replay: the SWF log through the 512-node simulator at
+        # configurable load. Acceptance, guarded by the CI
+        # trace-replay-smoke check: 100% of submitted trace jobs terminal
+        # (Terminated, or Error for trace-recorded failures) and the golden
+        # configuration's schedule signature byte-identical to
+        # tests/golden/swf_replay.json.
+        payload["swf_replay_smoke" if smoke else "swf_replay"] = \
+            [dataclasses.asdict(r) for r in swf_results]
     tmp = path + ".tmp"
     with open(tmp, "w") as fh:
         json.dump(payload, fh, indent=2, sort_keys=True)

@@ -24,6 +24,14 @@ Suites:
                  against a live daemon process over a file-backed WAL
                  store (sustained submits/s, p95 submit latency, e2e
                  drain) plus the kill-9/restart convergence record
+  launch_fanout  beyond-paper — parallel launcher: serial vs thread-pool
+                 tree deploy wall time through a genuinely blocking
+                 transport at 1k/10k nodes, with the byte-identical
+                 DeploymentReport determinism guarantee on record
+  swf_replay     beyond-paper — real-trace anchor: the bundled SWF
+                 workload log replayed through the 512-node simulator at
+                 configurable load (tenant mix + failure records
+                 included), with a pinned deterministic schedule signature
 
 The scheduler-perf suites (scale, burst) additionally record their numbers
 in ``BENCH_sched.json`` (pass wall time, SQL queries per pass, speedup vs
@@ -38,10 +46,10 @@ import sys
 import time
 
 from benchmarks import (burst, chaos, complexity, esp2, fairshare, gateway,
-                        parallel_jobs, scale)
+                        launch_fanout, parallel_jobs, scale, swf_replay)
 
 SUITES = ["complexity", "features", "esp2", "burst", "parallel_jobs", "scale",
-          "fairshare", "chaos", "gateway"]
+          "fairshare", "chaos", "gateway", "launch_fanout", "swf_replay"]
 
 
 def run_features() -> None:
@@ -97,6 +105,10 @@ def main(argv: list[str] | None = None) -> None:
             chaos.main(smoke=smoke)
         elif suite == "gateway":
             gateway.main(smoke=smoke)
+        elif suite == "launch_fanout":
+            launch_fanout.main(smoke=smoke)
+        elif suite == "swf_replay":
+            swf_replay.main(smoke=smoke)
         print(f"--- {suite} done in {time.perf_counter() - t:.1f}s")
     print(f"\nall suites done in {time.perf_counter() - t0:.1f}s")
 

@@ -1,0 +1,100 @@
+"""SWF real-trace replay — the BENCH trajectory anchored to a workload log.
+
+Every other suite drives synthetic workloads (ESP2's fixed job mix, Poisson
+bursts, adversarial floods). This one replays a Standard Workload Format
+trace — the archive format of the real cluster logs the paper validates
+against — through the full control plane on the 512-node simulator:
+arrivals, runtimes, parallelism, the tenant mix (user/group → the fairness
+tier's axes) and the failed/cancelled records (→ the recovery tier's
+user-fault path) all come from the trace, not from a generator.
+
+``load_scale`` compresses the arrival process (submit times ÷ factor, jobs
+untouched), so one log drives the same cluster at configurable load. The
+schedule is fully deterministic; its sha256 signature is recorded, and the
+200-job/1.0-load configuration is pinned byte-for-byte by both
+``tests/golden/swf_replay.json`` and the CI ``trace-replay-smoke`` guard.
+
+The bundled fixture (``benchmarks/data/mini_cluster.swf``) is a seeded
+miniature in genuine SWF clothing — regenerable via
+``repro.core.traces.synthetic_swf`` — so the harness stays self-contained;
+point ``TRACE`` at any Parallel Workloads Archive log to replay the real
+thing (e.g. KTH-SP2 or CTC-SP2).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+
+from repro.core import ClusterSimulator, jobstate, traces
+
+TRACE = os.path.join(os.path.dirname(__file__), "data", "mini_cluster.swf")
+NODES = 512
+
+# the golden configuration: first 200 jobs at natural load — what
+# tests/golden/swf_replay.json pins and the CI smoke guard cross-checks
+GOLDEN_JOBS = 200
+GOLDEN_LOAD = 1.0
+
+
+@dataclass
+class ReplayResult:
+    nodes: int
+    load_scale: float
+    trace_jobs: int          # records taken from the trace (post-normalize)
+    submitted: int           # accepted submission events
+    skipped: int             # records that never consumed the machine
+    terminal: int            # Terminated or Error at the end of the run
+    completed: int           # Terminated
+    failed: int              # Error (trace-recorded failures/cancels)
+    utilisation: float
+    virtual_makespan_s: float
+    wall_s: float
+    jobs_per_wall_s: float
+    signature: str           # sha256 over the full schedule (deterministic)
+
+
+def replay(*, max_jobs: int | None, load_scale: float,
+           nodes: int = NODES, trace_path: str = TRACE) -> ReplayResult:
+    trace = traces.load_swf(trace_path)
+    jobs = traces.normalize_trace(trace.jobs, load_scale=load_scale,
+                                  max_jobs=max_jobs, max_procs=nodes)
+    sim = ClusterSimulator(n_nodes=nodes, weight=1, policy="fifo_backfill",
+                           check_nodes=False)
+    stats = traces.replay_swf(sim, jobs)
+    t0 = time.perf_counter()
+    records = sim.run()
+    wall = time.perf_counter() - t0
+    completed = sum(1 for r in records if r.state == jobstate.TERMINATED)
+    failed = sum(1 for r in records if r.state == jobstate.ERROR)
+    return ReplayResult(
+        nodes=nodes, load_scale=load_scale, trace_jobs=len(jobs),
+        submitted=stats.submitted, skipped=stats.skipped,
+        terminal=completed + failed, completed=completed, failed=failed,
+        utilisation=round(sim.utilisation(), 4),
+        virtual_makespan_s=round(sim.now, 1), wall_s=round(wall, 3),
+        jobs_per_wall_s=round(stats.submitted / wall, 1) if wall else 0.0,
+        signature=traces.schedule_signature(records))
+
+
+def main(smoke: bool = False) -> list[ReplayResult]:
+    # the golden config always runs first — it is the determinism anchor;
+    # the full suite adds the whole log at natural and compressed load
+    configs = [(GOLDEN_JOBS, GOLDEN_LOAD)]
+    if not smoke:
+        configs += [(None, 1.0), (None, 3.0)]
+    results = [replay(max_jobs=mj, load_scale=ls) for mj, ls in configs]
+    print("nodes,load_scale,jobs,submitted,terminal,completed,failed,"
+          "utilisation,makespan_s,wall_s,signature[:12]")
+    for r in results:
+        print(f"{r.nodes},{r.load_scale},{r.trace_jobs},{r.submitted},"
+              f"{r.terminal},{r.completed},{r.failed},{r.utilisation},"
+              f"{r.virtual_makespan_s},{r.wall_s},{r.signature[:12]}")
+    from benchmarks.record import write_bench_sched
+    write_bench_sched(swf_results=results, smoke=smoke)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -20,10 +20,14 @@ from repro.core.request import (BadRequest, ResourceRequest, parse_request,
                                 canonical_request)
 from repro.core.central import CentralModule
 from repro.core.metascheduler import MetaScheduler
-from repro.core.launcher import Executor, TaktukLauncher, SimTransport
+from repro.core.launcher import (Executor, TaktukLauncher, SimTransport,
+                                 BlockingTransport)
 from repro.core.simulator import (ClusterSimulator, ChaosEvent, ChaosTrace,
                                   make_chaos_trace)
 from repro.core.recovery import CrashRestart, RecoveryModule
+from repro.core.traces import (SWFJob, SWFTrace, parse_swf, load_swf,
+                               emit_swf, normalize_trace, replay_swf,
+                               synthetic_swf)
 
 __all__ = [
     "Database", "connect", "oarsub", "oarsub_batch", "oardel", "oarstat",
@@ -31,7 +35,9 @@ __all__ = [
     "oarresume", "oarnodes", "add_resources", "remove_resources", "set_queue",
     "set_quota", "list_quotas", "drop_quota",
     "AdmissionError", "CentralModule", "MetaScheduler", "Executor",
-    "TaktukLauncher", "SimTransport", "ClusterSimulator",
+    "TaktukLauncher", "SimTransport", "BlockingTransport", "ClusterSimulator",
+    "SWFJob", "SWFTrace", "parse_swf", "load_swf", "emit_swf",
+    "normalize_trace", "replay_swf", "synthetic_swf",
     "ChaosEvent", "ChaosTrace", "make_chaos_trace",
     "CrashRestart", "RecoveryModule",
     "ClusterClient", "JobRequest", "JobInfo", "NodeInfo",

@@ -22,19 +22,35 @@ machine); a production deployment swaps in an ssh/gRPC transport with the
 same tree logic. The launcher also runs the job-execution and monitoring
 modules: launching `toLaunch` jobs, completing `Running` jobs, and the
 reachability sweep that feeds the resources table.
+
+Concurrency: ``TaktukLauncher(workers=N)`` fans the *real* connections out
+over a thread pool — per-subtree worker futures with batched host checks,
+bounded fan-out degree and the same work-stealing discipline — while the
+tree bookkeeping (who deploys whom, who steals what, the modelled makespan)
+is replayed deterministically from the recorded connection outcomes. The
+``DeploymentReport`` is therefore byte-identical to the serial path by
+construction, with or without failures; only the wall-clock time changes
+(benchmarks/launch_fanout.py measures the 10k-node cut). ``workers=0`` (the
+default) keeps the serial single-thread simulation, which is what the
+discrete-event simulator wants: its :class:`SimTransport` never blocks, so
+threads would be pure overhead there.
 """
 
 from __future__ import annotations
 
+import concurrent.futures
 import heapq
+import itertools
 import json
+import threading
 import time as _time
 from dataclasses import dataclass, field
 from typing import Callable
 
 from repro.core import jobstate
 
-__all__ = ["SimTransport", "TaktukLauncher", "DeploymentReport", "Executor",
+__all__ = ["SimTransport", "BlockingTransport", "TaktukLauncher",
+           "DeploymentReport", "Executor",
            "FLAP_PENALTY", "HEALTH_REWARD", "PROBATION_SWEEPS"]
 
 # Flap-dampened health automaton (resource_health table): every
@@ -77,6 +93,28 @@ class SimTransport:
 
 
 @dataclass
+class BlockingTransport(SimTransport):
+    """A :class:`SimTransport` that actually blocks the calling thread.
+
+    ``connect`` sleeps the modelled latency (and a failed host burns the
+    full ``connect_timeout``, like a real ssh client), so wall time through
+    this transport behaves like real remote connections: a serial deploy
+    pays the sum of the latencies, the thread-pool deploy pays roughly the
+    critical path over ``workers`` lanes. Used by the fan-out benchmark and
+    the concurrency stress tests; sleeps release the GIL, so worker threads
+    genuinely overlap.
+    """
+
+    def connect(self, host: str) -> float:
+        if host in self.failed_hosts:
+            _time.sleep(self.connect_timeout)
+            raise TimeoutError(f"{host}: no answer after {self.connect_timeout}s")
+        dt = self.latency + self.slow_hosts.get(host, 0.0)
+        _time.sleep(dt)
+        return dt
+
+
+@dataclass
 class DeploymentReport:
     reached: list[str]
     failed: list[str]
@@ -89,11 +127,24 @@ class DeploymentReport:
 # tree deployment with work stealing
 # --------------------------------------------------------------------------
 class TaktukLauncher:
-    """Binomial-tree parallel remote execution with work stealing."""
+    """Binomial-tree parallel remote execution with work stealing.
 
-    def __init__(self, transport: SimTransport | None = None, fanout: int = 2):
+    ``workers=0`` (default): the tree is executed serially under a virtual
+    clock — the right mode for the discrete-event simulator, whose transport
+    never blocks. ``workers=N>1``: connections fan out over a thread pool of
+    at most N concurrent subtree workers (see :meth:`_connect_all`), then
+    the tree bookkeeping is replayed from the recorded outcomes so the
+    report stays byte-identical to the serial path. ``check_batch`` is how
+    many hosts a subtree worker claims per trip to the shared pool — the
+    batched liveness check that keeps lock traffic off the hot path.
+    """
+
+    def __init__(self, transport: SimTransport | None = None, fanout: int = 2,
+                 *, workers: int = 0, check_batch: int = 8):
         self.transport = transport or SimTransport()
         self.fanout = fanout
+        self.workers = workers
+        self.check_batch = max(1, check_batch)
 
     def deploy(self, hosts: list[str], command: str = "") -> DeploymentReport:
         """Reach every host; returns who answered and the modelled makespan.
@@ -106,7 +157,34 @@ class TaktukLauncher:
         (dynamic work stealing — §2.4 load-balance under latency variation).
         Failed connections burn ``connect_timeout`` and the target is
         excluded from the tree (adaptive deployment).
+
+        With ``workers>1`` the transport calls run concurrently (every host
+        is contacted exactly once, exactly as in the serial path) and the
+        identical algorithm is then replayed over the recorded outcomes —
+        failures propagate up the tree the same way, and the report is
+        byte-identical to what the serial path returns.
         """
+        tr = self.transport
+        if self.workers > 1 and len(hosts) > 1:
+            outcomes = self._connect_all(hosts, command)
+
+            def execute(host: str) -> float:
+                dt = outcomes[host]
+                if dt is None:
+                    raise TimeoutError(
+                        f"{host}: no answer after {tr.connect_timeout}s")
+                return dt
+
+            return self._tree(hosts, execute)
+        return self._tree(hosts, lambda h: tr.execute(h, command))
+
+    # ------------------------------------------------- deterministic tree
+    def _tree(self, hosts: list[str],
+              execute: Callable[[str], float]) -> DeploymentReport:
+        """The tree algorithm itself — one code path for all three uses:
+        live serial execution, replay over parallel-collected outcomes, and
+        the differential oracle in the stress tests. ``execute(host)``
+        returns the connection latency or raises ``TimeoutError``."""
         tr = self.transport
         reached: list[str] = []
         failed: list[str] = []
@@ -139,7 +217,7 @@ class TaktukLauncher:
             host = sl.pop(0)
             connections += 1
             try:
-                dt = tr.execute(host, command)
+                dt = execute(host)
             except TimeoutError:
                 failed.append(host)
                 if not sl:
@@ -164,6 +242,94 @@ class TaktukLauncher:
             if sl or slices:
                 heapq.heappush(heap, (t2, w))
         return DeploymentReport(reached, failed, makespan, connections, steals)
+
+    # --------------------------------------------------- concurrent fan-out
+    def _connect_all(self, hosts: list[str],
+                     command: str) -> dict[str, float | None]:
+        """Fan the real transport calls out over subtree worker threads.
+
+        The concurrent mirror of the tree: a shared pool of host slices, one
+        future per subtree worker. Each worker claims a batch of up to
+        ``check_batch`` hosts from its slice per lock acquisition (batched
+        liveness checks), splits half of a big remainder off to a fresh
+        child future while fewer than ``workers`` futures are live (bounded
+        fan-out degree — the binomial spawn), and steals half of the largest
+        remaining slice when its own runs dry. Hosts leave the pool exactly
+        once and are never re-inserted, so every host sees exactly one
+        connection attempt no matter how the workers race.
+
+        Returns ``{host: latency}`` with ``None`` marking a timeout; any
+        *unexpected* transport exception (not ``TimeoutError``) is re-raised
+        here, after the pool has drained.
+        """
+        tr = self.transport
+        outcomes: dict[str, float | None] = {}
+        errors: list[BaseException] = []
+        lock = threading.Lock()
+        slices: dict[int, list[str]] = {0: list(hosts)}
+        ids = itertools.count(1)
+        futures: list[concurrent.futures.Future] = []
+        live = [0]                   # live futures, maintained under lock
+
+        def spawn(pool, wid: int) -> None:
+            live[0] += 1             # caller holds the lock
+            futures.append(pool.submit(worker, pool, wid))
+
+        def worker(pool, wid: int) -> None:
+            try:
+                while True:
+                    with lock:
+                        sl = slices.get(wid)
+                        if not sl:
+                            slices.pop(wid, None)
+                            if not slices:
+                                return        # remaining work is in flight
+                            donor = max(slices, key=lambda k: len(slices[k]))
+                            dsl = slices[donor]
+                            take = dsl[len(dsl) // 2:]
+                            del dsl[len(dsl) // 2:]
+                            if not dsl:
+                                del slices[donor]
+                            sl = slices[wid] = take
+                        batch = sl[:self.check_batch]
+                        del sl[:self.check_batch]
+                        # binomial spawn: half the remainder becomes a new
+                        # subtree future while the pool has headroom
+                        if len(sl) > self.check_batch and live[0] < self.workers:
+                            half = sl[len(sl) // 2:]
+                            del sl[len(sl) // 2:]
+                            if half:
+                                child = next(ids)
+                                slices[child] = half
+                                spawn(pool, child)
+                        if not sl:
+                            slices.pop(wid, None)
+                    for host in batch:
+                        try:
+                            dt: float | None = tr.execute(host, command)
+                        except TimeoutError:
+                            dt = None
+                        with lock:
+                            outcomes[host] = dt
+            except BaseException as exc:     # propagate up the tree
+                with lock:
+                    errors.append(exc)
+            finally:
+                with lock:
+                    live[0] -= 1
+
+        with concurrent.futures.ThreadPoolExecutor(
+                max_workers=self.workers) as pool:
+            with lock:
+                spawn(pool, 0)
+            while True:          # workers spawn workers: wait until no new
+                snapshot = list(futures)          # futures appeared during
+                concurrent.futures.wait(snapshot)  # the last wait round
+                if len(snapshot) == len(futures):
+                    break
+        if errors:
+            raise errors[0]
+        return outcomes
 
     def check_hosts(self, hosts: list[str]) -> DeploymentReport:
         """Reachability sweep (the 'check nodes state' of fig. 10)."""

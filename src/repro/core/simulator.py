@@ -287,7 +287,8 @@ class ClusterSimulator:
                best_effort: bool | None = None, tag: str = "",
                request: str | None = None,
                deadline: float | None = None,
-               max_retries: int | None = None) -> None:
+               max_retries: int | None = None,
+               fail: bool = False) -> None:
         """Queue a submission event at virtual time ``at``.
 
         ``duration`` is the job's *actual* run time (virtual); ``max_time``
@@ -305,6 +306,9 @@ class ClusterSimulator:
         ("interactive", "default", "besteffort" by default).
         ``max_retries`` is the job's budget against *system* failures
         (node death, crash orphaning — default 3; 0 disables retries).
+        ``fail=True`` makes the payload itself fail: the job runs its full
+        ``duration`` and then terminates through the user-fault Error path
+        (no retry) — how SWF trace replay models status-0/5 records.
         """
         self._push(at, "submit", {
             "duration": duration, "nb_nodes": nb_nodes, "weight": weight,
@@ -313,7 +317,7 @@ class ClusterSimulator:
             "properties": properties,
             "reservation_start": reservation_start, "best_effort": best_effort,
             "tag": tag, "request": request, "deadline": deadline,
-            "max_retries": max_retries})
+            "max_retries": max_retries, "fail": fail})
 
     def fail_node(self, at: float, hostname: str) -> None:
         """Make ``hostname`` unreachable from time ``at``: the next
@@ -451,10 +455,12 @@ class ClusterSimulator:
 
     # ----------------------------------------------------------- event kinds
     def _on_submit(self, p: dict) -> None:
+        spec = {"kind": "sim", "duration": p["duration"], "tag": p["tag"]}
+        if p.get("fail"):     # only when set: legacy specs stay byte-identical
+            spec["fail"] = True
         try:
             jid = api.oarsub(
-                self.db, json.dumps({"kind": "sim", "duration": p["duration"],
-                                     "tag": p["tag"]}),
+                self.db, json.dumps(spec),
                 user=p["user"], project=p["project"],
                 queue=p["queue"], nb_nodes=p["nb_nodes"],
                 weight=p["weight"], max_time=p["max_time"],
@@ -558,9 +564,13 @@ class ClusterSimulator:
             if r is None:          # cancelled again within the same drain
                 continue
             try:
-                duration = json.loads(r["command"]).get("duration", r["maxTime"])
+                spec = json.loads(r["command"])
+                if not isinstance(spec, dict):
+                    raise ValueError
             except (ValueError, TypeError):
-                duration = r["maxTime"]
+                spec = {}
+            duration = spec.get("duration", r["maxTime"])
+            fails = bool(spec.get("fail"))
             if jid in self.records:
                 self.records[jid].start = r["startTime"]
             else:  # resubmitted best-effort clones
@@ -579,6 +589,12 @@ class ClusterSimulator:
             if duration > r["maxTime"]:
                 self._push(r["startTime"] + r["maxTime"], "complete",
                            (jid, False, "walltime exceeded"))
+            elif fails:
+                # a trace-recorded job failure: the payload runs its logged
+                # time, then dies as a *user* fault — terminal Error, not
+                # retried (the recovery tier only retries system failures)
+                self._push(r["startTime"] + duration, "complete",
+                           (jid, False, "job failed (trace record)"))
             else:
                 self._push(r["startTime"] + duration, "complete", (jid, True, ""))
 

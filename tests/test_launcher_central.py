@@ -1,7 +1,10 @@
-"""Taktuk launcher (tree deploy, work stealing, failure detection) and the
+"""Taktuk launcher (tree deploy, work stealing, failure detection), the
+concurrent fan-out engine (serial-oracle determinism + race stress) and the
 central module (notification coalescing, periodic redundancy, recovery)."""
 
 import itertools
+import random
+import threading
 
 from hypothesis import given, settings, strategies as st
 
@@ -55,6 +58,107 @@ def test_deploy_partition_property(n, failed_idx):
     assert set(rep.reached) | set(rep.failed) == set(hosts)
     assert set(rep.reached).isdisjoint(rep.failed)
     assert set(rep.failed) == failed
+
+
+# -------------------------------------------------------- concurrent fan-out
+def test_parallel_deploy_matches_serial_oracle_over_50_seeds():
+    """Differential stress: for 50 seeded worlds (random cluster size, dead
+    hosts, stragglers, claim-batch size), the thread-pool deploy must return
+    a DeploymentReport *byte-identical* to the serial tree — reached order,
+    failed order, modelled makespan, connection count and steal count."""
+    for seed in range(50):
+        rng = random.Random(seed)
+        n = rng.randint(2, 120)
+        hosts = [f"h{i}" for i in range(n)]
+        tr = SimTransport(
+            latency=0.01, connect_timeout=0.3,
+            failed_hosts={h for h in hosts if rng.random() < 0.15},
+            slow_hosts={h: rng.uniform(0.05, 0.5)
+                        for h in hosts if rng.random() < 0.1})
+        serial = TaktukLauncher(tr).deploy(hosts, "job")
+        parallel = TaktukLauncher(
+            tr, workers=8,
+            check_batch=rng.choice([1, 2, 4, 8])).deploy(hosts, "job")
+        assert parallel == serial, f"report diverged at seed={seed}"
+        assert set(serial.reached) | set(serial.failed) == set(hosts)
+
+
+class _RacingTransport(SimTransport):
+    """Proves genuine concurrency and exactly-once contact: the first
+    ``parties`` connects rendezvous on a barrier (it only releases if that
+    many worker threads are *simultaneously* inside connect), and every
+    connect bumps a per-host counter."""
+
+    def __init__(self, parties: int, **kw):
+        super().__init__(**kw)
+        self.barrier = threading.Barrier(parties, timeout=30.0)
+        self.calls: dict[str, int] = {}
+        self._lock = threading.Lock()
+        self._gated = parties
+        self.rendezvous = 0
+
+    def connect(self, host: str) -> float:
+        with self._lock:
+            self.calls[host] = self.calls.get(host, 0) + 1
+            gate = self._gated > 0
+            if gate:
+                self._gated -= 1
+        if gate:
+            self.barrier.wait()
+            with self._lock:
+                self.rendezvous += 1
+        return super().connect(host)
+
+
+def test_racing_workers_contact_each_host_exactly_once():
+    """Barrier race: 4 subtree workers forced to be live at once, against
+    injected host failures, across deterministic seeds. No lost host, no
+    duplicated launch, and the report equals the serial oracle."""
+    for seed in (0, 1, 2):
+        rng = random.Random(seed)
+        hosts = [f"h{i}" for i in range(60)]
+        failed = {h for h in hosts if rng.random() < 0.1}
+        # the gated hosts must answer or the barrier never fills — connect
+        # raises for failed hosts only after the rendezvous, which is fine
+        tr = _RacingTransport(parties=4, latency=0.001, connect_timeout=0.05,
+                              failed_hosts=failed)
+        rep = TaktukLauncher(tr, workers=4, check_batch=1).deploy(hosts, "job")
+        assert tr.rendezvous == 4, "4 workers never ran concurrently"
+        assert not tr.barrier.broken
+        assert tr.calls == {h: 1 for h in hosts}      # exactly-once, nobody lost
+        oracle = TaktukLauncher(
+            SimTransport(latency=0.001, connect_timeout=0.05,
+                         failed_hosts=failed)).deploy(hosts, "job")
+        assert rep == oracle, f"race diverged from oracle at seed={seed}"
+
+
+def test_parallel_deploy_propagates_unexpected_errors():
+    """A non-timeout transport fault must surface to the caller (after the
+    pool drains), exactly as the serial path would raise it."""
+
+    class Exploding(SimTransport):
+        def connect(self, host: str) -> float:
+            if host == "h13":
+                raise RuntimeError("wire cut")
+            return super().connect(host)
+
+    hosts = [f"h{i}" for i in range(40)]
+    try:
+        TaktukLauncher(Exploding(latency=0.0), workers=4,
+                       check_batch=1).deploy(hosts, "job")
+    except RuntimeError as exc:
+        assert "wire cut" in str(exc)
+    else:
+        raise AssertionError("transport fault was swallowed")
+
+
+def test_workers_zero_and_single_host_stay_serial():
+    """The simulator's mode: workers=0 (and the trivial 1-host deploy) never
+    touch the thread engine, so a non-thread-safe transport is fine there."""
+    rep0 = TaktukLauncher(SimTransport(), workers=0).deploy(
+        [f"h{i}" for i in range(10)])
+    rep1 = TaktukLauncher(SimTransport(), workers=8).deploy(["h0"])
+    assert len(rep0.reached) == 10 and rep1.reached == ["h0"]
 
 
 # ------------------------------------------------------------------- central
