@@ -1,0 +1,78 @@
+"""Fetch the real KTH-SP2 log from the Parallel Workloads Archive.
+
+The KTH SP2 trace (28 489 jobs, 100 processors, Sep 1996 – Aug 1997) is the
+archive log closest to the paper's validation era. This script downloads the
+cleaned gzip'd SWF from Feitelson's archive, decompresses it next to itself
+and sanity-checks the parse, so the replay suite can drive the real thing:
+
+    python benchmarks/data/fetch_kth_sp2.py
+    PYTHONPATH=src python - <<'PY'
+    from benchmarks.swf_replay import replay
+    print(replay(max_jobs=None, load_scale=1.0, nodes=100,
+                 trace_path="benchmarks/data/KTH-SP2-1996-2.1-cln.swf"))
+    PY
+
+**Requires network access** — the reference container has none, which is
+why the repository does not depend on this file existing. The committed
+fixture ``kth_sp2_standin.swf`` is a seeded 900-job miniature in the same
+clothing (100 processors, ~60% offered load, SP2-ish runtime/parallelism
+mix), regenerable via ``repro.core.traces.synthetic_swf`` — the golden
+signature (``tests/golden/kth_sp2.json``) and the BENCH policy comparison
+pin the stand-in precisely so they stay deterministic offline. Fetching
+the real log adds realism on top; it never replaces the anchors.
+"""
+
+from __future__ import annotations
+
+import gzip
+import os
+import sys
+import urllib.request
+
+URL = ("https://www.cs.huji.ac.il/labs/parallel/workload/l_kth_sp2/"
+       "KTH-SP2-1996-2.1-cln.swf.gz")
+DEST = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                    "KTH-SP2-1996-2.1-cln.swf")
+# published shape of the cleaned log — the post-download sanity check
+EXPECT_JOBS = 28_489
+EXPECT_PROCS = 100
+
+
+def fetch(url: str = URL, dest: str = DEST, *, force: bool = False) -> str:
+    if os.path.exists(dest) and not force:
+        print(f"already present: {dest} (use --force to re-download)")
+        return dest
+    print(f"fetching {url} ...")
+    try:
+        with urllib.request.urlopen(url, timeout=60) as resp:
+            raw = resp.read()
+    except OSError as exc:
+        sys.exit(f"download failed ({exc}) — this script needs network "
+                 f"access; offline, use the bundled stand-in "
+                 f"benchmarks/data/kth_sp2_standin.swf instead")
+    text = gzip.decompress(raw).decode("ascii", errors="replace")
+    tmp = dest + ".tmp"
+    with open(tmp, "w") as fh:
+        fh.write(text)
+    os.replace(tmp, dest)
+    return dest
+
+
+def check(path: str) -> None:
+    sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                    os.pardir, os.pardir, "src"))
+    from repro.core import traces
+    trace = traces.load_swf(path)
+    print(f"parsed {len(trace.jobs)} jobs, {trace.skipped} skipped, "
+          f"{len(trace.header)} header lines")
+    if len(trace.jobs) != EXPECT_JOBS:
+        sys.exit(f"unexpected job count {len(trace.jobs)} "
+                 f"(expected {EXPECT_JOBS}) — archive log revised?")
+    if not any(f"MaxProcs: {EXPECT_PROCS}" in h for h in trace.header):
+        sys.exit("MaxProcs header mismatch — not the KTH SP2 log?")
+    print(f"OK: {path}")
+
+
+if __name__ == "__main__":
+    target = fetch(force="--force" in sys.argv[1:])
+    check(target)

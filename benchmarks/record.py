@@ -46,6 +46,7 @@ def write_bench_sched(path: str = BENCH_PATH, *, scale_results=None,
                       fairshare_results=None, quota_pass=None,
                       chaos_results=None, gateway_results=None,
                       fanout_results=None, swf_results=None,
+                      kth_results=None, energy_results=None,
                       smoke: bool | None = None) -> dict:
     """Merge suite results into BENCH_sched.json (section per suite, so
     scale, the hierarchical-request variant and burst can each emit
@@ -190,6 +191,22 @@ def write_bench_sched(path: str = BENCH_PATH, *, scale_results=None,
         # tests/golden/swf_replay.json.
         payload["swf_replay_smoke" if smoke else "swf_replay"] = \
             [dataclasses.asdict(r) for r in swf_results]
+    if kth_results is not None:
+        # the KTH-SP2 data drop: the SP2-shaped log's golden replay prefix
+        # (second determinism anchor, pinned in tests/golden/kth_sp2.json)
+        # plus — on the full run — the 60%-load policy-tier comparison
+        # (FIFO-backfill baseline vs fairshare vs the sleep/wake planner on
+        # the identical trace), the realism headline for the policy tiers.
+        payload["kth_sp2_smoke" if smoke else "kth_sp2"] = kth_results
+    if energy_results is not None:
+        # the energy-elasticity tier: paired diurnal runs (planner live vs
+        # always-on twin on the identical seeded trace) at 30/60/90% load,
+        # plus the power-gated headline pass. Acceptance, guarded by the CI
+        # energy-smoke check: >= 20% node-on hours saved at 30% load, p95
+        # wait degradation <= 10% of mean job duration at every load, the
+        # power-gated pass keeps the >=5x wall / >=10x SQL seed margins,
+        # and an armed idle tick stays 0-SQL with the energy leg installed.
+        payload["energy_smoke" if smoke else "energy"] = energy_results
     tmp = path + ".tmp"
     with open(tmp, "w") as fh:
         json.dump(payload, fh, indent=2, sort_keys=True)

@@ -32,6 +32,11 @@ Suites:
                  workload log replayed through the 512-node simulator at
                  configurable load (tenant mix + failure records
                  included), with a pinned deterministic schedule signature
+  energy         beyond-paper — energy-elasticity tier: paired diurnal
+                 runs (Gantt-forecast sleep/wake planner vs always-on
+                 twin) at 30/60/90% load — node-on hours saved vs p95
+                 wait cost — plus the power-gated headline pass and the
+                 0-SQL armed-idle-tick check
 
 The scheduler-perf suites (scale, burst) additionally record their numbers
 in ``BENCH_sched.json`` (pass wall time, SQL queries per pass, speedup vs
@@ -45,11 +50,13 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import (burst, chaos, complexity, esp2, fairshare, gateway,
-                        launch_fanout, parallel_jobs, scale, swf_replay)
+from benchmarks import (burst, chaos, complexity, energy, esp2, fairshare,
+                        gateway, launch_fanout, parallel_jobs, scale,
+                        swf_replay)
 
 SUITES = ["complexity", "features", "esp2", "burst", "parallel_jobs", "scale",
-          "fairshare", "chaos", "gateway", "launch_fanout", "swf_replay"]
+          "fairshare", "chaos", "gateway", "launch_fanout", "swf_replay",
+          "energy"]
 
 
 def run_features() -> None:
@@ -109,6 +116,8 @@ def main(argv: list[str] | None = None) -> None:
             launch_fanout.main(smoke=smoke)
         elif suite == "swf_replay":
             swf_replay.main(smoke=smoke)
+        elif suite == "energy":
+            energy.main(smoke=smoke)
         print(f"--- {suite} done in {time.perf_counter() - t:.1f}s")
     print(f"\nall suites done in {time.perf_counter() - t0:.1f}s")
 

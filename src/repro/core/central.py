@@ -31,7 +31,8 @@ from repro.core.metascheduler import MetaScheduler
 __all__ = ["CentralModule"]
 
 # task kinds the automaton knows; notification tags map onto them
-TASKS = ("scheduler", "launcher", "cancel", "monitor", "resubmit", "reaper")
+TASKS = ("scheduler", "launcher", "cancel", "monitor", "resubmit", "reaper",
+         "energy")
 _TAG_TO_TASKS = {
     "submission": ("scheduler",),
     "jobstate": ("launcher",),
@@ -41,6 +42,7 @@ _TAG_TO_TASKS = {
     "cancel": ("cancel", "resubmit", "scheduler"),
     "monitor": ("monitor",),
     "reaper": ("reaper",),
+    "energy": ("energy",),
 }
 
 
@@ -55,6 +57,7 @@ class CentralModule:
                  scheduler: MetaScheduler | None = None,
                  executor: Executor | None = None,
                  recovery: "recovery_mod.RecoveryModule | None" = None,
+                 energy=None,
                  periods: dict[str, float] | None = None):
         self.db = db
         self.clock = clock or _time.time
@@ -63,9 +66,15 @@ class CentralModule:
                                              launcher=TaktukLauncher())
         self.recovery = recovery or recovery_mod.RecoveryModule(
             db, clock=self.clock)
-        # periodic redundancy (§2.2): every task re-runs at least this often
+        # energy tier: None (the default) disables the leg entirely — no
+        # power work, no extra SQL, behaviour identical to before the tier
+        self.energy = energy
+        # periodic redundancy (§2.2): every task re-runs at least this often.
+        # With the energy tier absent its leg must never *become* due — an
+        # inf period keeps tick cadence byte-identical to the pre-tier plane
         self.periods = {"scheduler": 30.0, "launcher": 5.0, "cancel": 10.0,
-                        "monitor": 60.0, "resubmit": 30.0, "reaper": 60.0}
+                        "monitor": 60.0, "resubmit": 30.0, "reaper": 60.0,
+                        "energy": 60.0 if energy is not None else float("inf")}
         if periods:
             self.periods.update(periods)
         self._pending: set[str] = set(TASKS)   # run everything on first tick
@@ -118,6 +127,16 @@ class CentralModule:
                 self._last_run["reaper"] = now
                 due.update(self._pending)   # reap may flag resubmit/launcher
                 self._pending.clear()
+            if "energy" in due:
+                # before the scheduler leg: a boot completing here notifies
+                # "scheduler", and the merge below folds it into THIS tick so
+                # the pass plans over the just-grown pool. Deadline-driven:
+                # step() is zero-SQL when no power work is due.
+                if self.energy is not None:
+                    report["energy"] = self.energy.step(now)
+                    due.update(self._pending)
+                    self._pending.clear()
+                self._last_run["energy"] = now
             if "cancel" in due:
                 report["cancelled"] = self.executor.run_cancellation()
                 self._last_run["cancel"] = now
@@ -169,7 +188,9 @@ class CentralModule:
         not (it would tick forever on an idle cluster).
         """
         deadlines = []
-        for module in (self.scheduler, self.recovery):
+        for module in (self.scheduler, self.recovery, self.energy):
+            if module is None:
+                continue
             report = getattr(module, "next_deadline", None)
             if report is not None:
                 t = report(now)

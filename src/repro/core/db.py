@@ -51,10 +51,14 @@ class Database:
         # file-backed store is shared by several OS processes (gateway,
         # central daemon, clients), and concurrent writers must wait for the
         # WAL write lock instead of raising immediately. On top of the
-        # engine-level wait, execute/executemany/commit retry ONCE after
-        # ``busy_retry_s`` — a writer stuck behind a long pass fails soft.
+        # engine-level wait, execute/executemany/commit retry with a bounded
+        # capped-exponential backoff (busy_retry_s, 2x per attempt, capped at
+        # busy_retry_cap_s, busy_retries attempts) — a writer stuck behind a
+        # long pass queues instead of dying on the second collision.
         self._conn.execute(f"PRAGMA busy_timeout={int(timeout * 1000)}")
         self.busy_retry_s = busy_retry_s
+        self.busy_retries = 5
+        self.busy_retry_cap_s = 2.0
         if path != ":memory:":
             self._conn.execute("PRAGMA journal_mode=WAL")
             self._conn.execute("PRAGMA synchronous=NORMAL")
@@ -145,20 +149,28 @@ class Database:
             pass   # no counters table at all: in-process detection still works
 
     def _retry_busy(self, fn, *, rollback: bool = False):
-        """Run ``fn`` retrying ONCE on SQLITE_BUSY/locked — the soft-fail
-        contract for concurrent writers sharing the WAL store. ``rollback``
-        discards a partially-applied autocommit unit (executemany) before
-        the retry re-runs it from the top."""
-        try:
-            return fn()
-        except sqlite3.OperationalError as exc:
-            msg = str(exc)
-            if "locked" not in msg and "busy" not in msg:
-                raise
-            if rollback and self._txn_depth == 0 and self._conn.in_transaction:
-                self._conn.rollback()
-            time.sleep(self.busy_retry_s)
-            return fn()
+        """Run ``fn`` retrying on SQLITE_BUSY/locked — the soft-fail contract
+        for concurrent writers sharing the WAL store. Bounded backoff: up to
+        ``busy_retries`` retries, sleeping ``busy_retry_s * 2**attempt``
+        (capped at ``busy_retry_cap_s``) between them, so a writer parked
+        behind a long pass or a slow sibling process keeps queueing instead
+        of escaping on the second collision and killing the central drain
+        mid-pass. ``rollback`` discards a partially-applied autocommit unit
+        (executemany) before each retry re-runs it from the top."""
+        attempts = max(1, int(self.busy_retries)) + 1
+        for attempt in range(attempts):
+            try:
+                return fn()
+            except sqlite3.OperationalError as exc:
+                msg = str(exc)
+                if "locked" not in msg and "busy" not in msg:
+                    raise
+                if attempt == attempts - 1:
+                    raise
+                if rollback and self._txn_depth == 0 and self._conn.in_transaction:
+                    self._conn.rollback()
+                time.sleep(min(self.busy_retry_s * (2 ** attempt),
+                               self.busy_retry_cap_s))
 
     # ------------------------------------------------------------------ DDL
     def create_schema(self) -> None:

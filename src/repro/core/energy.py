@@ -1,0 +1,448 @@
+"""Energy-aware elasticity — Gantt-forecast sleep/wake planning.
+
+OAR3 ships this as the Hulot/Greta energy module (``search_idle_nodes`` /
+``get_gantt_hostname_to_wake_up``): nodes the Gantt predicts idle beyond a
+threshold are powered down, and wake-ups are *scheduled* ahead of predicted
+demand so jobs never block on cold boots. The DB-as-bus architecture makes
+the whole policy a reader of state the scheduler already maintains — the
+bitset Gantt forecast gives the idle horizon for free, and power becomes one
+more declarative resource property (``resources.power``) the selector
+compiles against, exactly like the health tier's ``state`` gate.
+
+Power lifecycle (schema.py documents the columns)::
+
+    on ──(forecast-idle ≥ idle_threshold_s)──▶ off
+    off ──(wake issued: demand, or wakeAt due)──▶ waking
+    waking ──(boot_s elapsed)──▶ on
+    waking/off+wakeAt ──(host quarantined Dead)──▶ wake CANCELLED
+
+Split of responsibilities:
+
+* :meth:`EnergyModule.plan` runs INSIDE a full scheduling pass (the
+  meta-scheduler calls it after placing the backlog): it walks the pass's
+  Gantt — which at that point holds running jobs, granted reservations AND
+  this pass's planned placements — to find hosts with no occupancy anywhere
+  in the forecast, starts/advances their idle clocks, powers down the ones
+  idle beyond the threshold, and wakes capacity for *deferred demand* (jobs
+  left waiting, or placed later than ``now + boot_s + headroom``, because
+  the powered pool is too small). Reads ride the pass cache; the only SQL
+  it adds is one resources scan plus the transition writes themselves.
+* :meth:`EnergyModule.step` is the central automaton's energy leg: it
+  issues wake commands whose scheduled time arrived, completes boots whose
+  ``boot_s`` elapsed, executes deferred sleeps, and cancels pending wakes
+  on hosts the health tier has since retired. It is deadline-driven: when
+  nothing is due (``next_deadline``), it returns without touching SQL —
+  the armed no-op pass stays 0-SQL with the energy leg installed.
+
+Generation discipline (the memo contract): transitions that change the
+schedulable pool (on→off, waking→on, off→waking) are ordinary bumping
+writes — the scheduler MUST re-plan around them. Bookkeeping that does not
+change what is placeable (re-scheduling a pending wake on a still-off host,
+cancelling a dead host's wake, retry backoff) uses ``execute_quiet``.
+
+Boot latency is charged where the paper's Gantt logic wants it: a 'waking'
+host is a full member of every candidate mask, but the meta-scheduler
+occupies its timeline until ``wakeAt`` — a job claiming it is delayed by
+the remainder of the boot, the pass itself never blocks.
+"""
+
+from __future__ import annotations
+
+import time as _time
+from dataclasses import dataclass
+
+from repro.core.gantt import EPS
+from repro.core.recovery import backoff_delay
+
+__all__ = ["EnergyConfig", "EnergyModule",
+           "POWER_ON", "POWER_OFF", "POWER_WAKING"]
+
+POWER_ON = "on"
+POWER_OFF = "off"
+POWER_WAKING = "waking"
+
+
+@dataclass
+class EnergyConfig:
+    """Knobs of the sleep/wake planner (README "Energy elasticity" section).
+
+    ``idle_threshold_s``: a host must be forecast-idle (no occupancy
+    anywhere in the Gantt) for this long before it is powered down.
+    ``boot_s``: modelled cold-boot latency — the time between the wake
+    command and the host being usable; charged into the host's Gantt slot.
+    ``min_on``: warm-pool floor — the planner keeps at least this many
+    *instantly available* hosts (forecast-idle and powered, or mid-boot)
+    at all times: it never sleeps into the floor, and proactively boots
+    replacements when placements eat into it, so the ramp out of a trough
+    wakes ahead of arrivals instead of charging each job a cold boot.
+    ``wake_headroom_s``: wake this much earlier than strictly needed.
+    ``max_wake_retries``: failed wake commands retry with the recovery
+    tier's capped-exponential backoff this many times, then the host is
+    handed to the health tier (Suspected).
+    """
+
+    idle_threshold_s: float = 600.0
+    boot_s: float = 120.0
+    min_on: int = 1
+    wake_headroom_s: float = 0.0
+    max_wake_retries: int = 3
+
+
+class EnergyModule:
+    """Sleep/wake planner + the central automaton's energy leg.
+
+    ``transport`` is the launcher-layer power transport (``wake``/``sleep``
+    ops on :class:`~repro.core.launcher.SimTransport`); ``None`` models an
+    ideal BMC that never fails. The module is stateless where it matters:
+    every decision is recomputed from the store + the pass Gantt, so a
+    crash-restart loses only idle-clock progress (hosts re-earn their
+    threshold — conservative, never wrong).
+    """
+
+    def __init__(self, db, *, config: EnergyConfig | None = None,
+                 transport=None, clock=None):
+        self.db = db
+        self.cfg = config or EnergyConfig()
+        self.transport = transport
+        self.clock = clock or _time.time
+        # earliest instant time-driven work (a scheduled wake issue, a boot
+        # completion, a deferred sleep) becomes due — cached so
+        # next_deadline is SQL-free, maintained by plan()/step()
+        self._next_event = float("inf")
+        self._idle_since: dict[int, float] = {}   # rid -> forecast-idle start
+        self._sleep_due: dict[int, float] = {}    # rid -> deferred sleep time
+        self._wake_retries: dict[int, int] = {}
+        self.stats = {"sleeps": 0, "wakes": 0, "boots": 0,
+                      "wake_failures": 0, "wakes_cancelled": 0,
+                      "sleep_failures": 0}
+        # node-on integral (benchmarks/energy.py): powered-host-count is
+        # piecewise constant between transitions, so integrating at each
+        # plan/step suffices
+        self._acct_t: float | None = None
+        self._acct_on = 0
+        self.on_seconds = 0.0
+
+    # ------------------------------------------------------------ accounting
+    def _account(self, now: float, on_count: int) -> None:
+        if self._acct_t is not None and now > self._acct_t:
+            self.on_seconds += self._acct_on * (now - self._acct_t)
+        self._acct_t = now
+        self._acct_on = on_count
+
+    def on_node_seconds(self, now: float) -> float:
+        """Integral of powered hosts (on + waking) over time since the
+        first plan — the benchmark's node-on-hours numerator."""
+        self._account(now, self._acct_on)
+        return self.on_seconds
+
+    # -------------------------------------------------------------- planning
+    def plan(self, gantt, now: float, *, placements=(), views=()) -> None:
+        """The in-pass leg: sleep forecast-idle hosts, wake for deferred
+        demand. ``gantt`` is the pass's post-placement forecast; ``views``
+        the queue jobs the pass considered, ``placements`` where they went.
+        """
+        cfg = self.cfg
+        index = gantt.index
+        rows = self.db.query(
+            "SELECT idResource, hostname, power, wakeAt FROM resources "
+            "WHERE state='Alive'")
+        on_rids: list[int] = []
+        off_rids: list[int] = []      # ascending id = locality order
+        waking = 0
+        host_of: dict[int, str] = {}
+        for r in rows:
+            host_of[r["idResource"]] = r["hostname"]
+            if r["power"] == POWER_OFF:
+                off_rids.append(r["idResource"])
+            elif r["power"] == POWER_WAKING:
+                waking += 1
+            else:
+                on_rids.append(r["idResource"])
+        self._account(now, len(on_rids) + waking)
+
+        # ---- forecast: hosts with occupancy anywhere in the Gantt timeline
+        busy_future = 0
+        for slot in gantt.slots:
+            busy_future |= index.full_mask & ~slot.free
+        idle_on = [rid for rid in on_rids if rid in index
+                   and not (busy_future >> index.bit_of(rid)) & 1]
+        idle_set = set(idle_on)
+        for rid in list(self._idle_since):
+            if rid not in idle_set:
+                self._idle_since.pop(rid, None)
+                self._sleep_due.pop(rid, None)
+        for rid in idle_on:
+            self._idle_since.setdefault(rid, now)
+
+        # ---- sleep: idle beyond the threshold, keeping a *warm pool* of
+        # min_on instantly-available hosts (a waking host counts — it is
+        # warm within a boot). High ids sleep first: placement prefers low
+        # bits (locality), so the warm floor that stays powered is the pool
+        # placements go to anyway.
+        may_sleep = max(0, len(idle_on) + waking - max(0, cfg.min_on))
+        candidates = sorted(idle_on, reverse=True)[:may_sleep]
+        due = [rid for rid in candidates
+               if now + EPS >= self._idle_since[rid] + cfg.idle_threshold_s]
+        deferred = [rid for rid in candidates if rid not in set(due)]
+        if due:
+            self._sleep_hosts(due, host_of, now)
+        self._sleep_due = {rid: self._idle_since[rid] + cfg.idle_threshold_s
+                           for rid in deferred}
+
+        # ---- wake: demand the powered pool deferred past a boot. A job
+        # counted here either found no slot at all or starts later than a
+        # cold boot would take — waking hosts NOW bounds its regression vs
+        # an always-on cluster by boot_s.
+        if off_rids:
+            placed = {p.idJob: p for p in placements}
+            horizon = now + cfg.boot_s + cfg.wake_headroom_s
+            demand = 0
+            for v in views:
+                if v.bestEffort:
+                    continue   # best-effort backlog must not burn energy
+                p = placed.get(v.idJob)
+                if p is not None and p.start <= horizon + EPS:
+                    continue
+                demand += (min(a.min_hosts for a in v.alternatives)
+                           if v.alternatives else v.nbNodes)
+            # warm-floor deficit: when placements ate into the warm pool,
+            # boot replacements *ahead* of the next arrivals (the ramp out
+            # of the trough) instead of charging each of them a cold boot
+            warm = len(idle_on) - len(due) + waking
+            demand += max(0, cfg.min_on - warm)
+            if demand:
+                self._issue_wakes(off_rids[:demand], host_of, now)
+        self._recompute_next_event(now)
+
+    def request_capacity(self, n_hosts: int, now: float, *,
+                         ready_by: float | None = None) -> int:
+        """Wake up to ``n_hosts`` powered-off hosts for demand the pass
+        could not serve (e.g. a reservation that found no slot). When the
+        demand is at a known future instant, the wake is *scheduled* at
+        ``ready_by - boot_s - headroom`` instead of issued immediately —
+        the host boots just in time, sleeping until then. Hosts already
+        waking (or holding a scheduled wake) count toward the demand, so a
+        caller retrying every pass while boots are in flight stays patient
+        instead of waking ever more hosts. Returns how many hosts are
+        woken, booting or scheduled toward the demand (0 = nothing left to
+        wake: the caller's demand is genuinely unsatisfiable)."""
+        pending = self.db.scalar(
+            "SELECT COUNT(*) FROM resources WHERE state='Alive' AND "
+            "(power='waking' OR (power='off' AND wakeAt IS NOT NULL))") or 0
+        if pending >= n_hosts:
+            return pending
+        n_hosts -= pending
+        rows = self.db.query(
+            "SELECT idResource, hostname FROM resources "
+            "WHERE state='Alive' AND power='off' AND wakeAt IS NULL "
+            "ORDER BY idResource LIMIT ?", (max(0, n_hosts),))
+        if not rows:
+            return pending
+        host_of = {r["idResource"]: r["hostname"] for r in rows}
+        rids = list(host_of)
+        issue_at = now
+        if ready_by is not None:
+            issue_at = ready_by - self.cfg.boot_s - self.cfg.wake_headroom_s
+        if issue_at <= now + EPS:
+            self._issue_wakes(rids, host_of, now)
+        else:
+            # scheduled wake-ahead: the host stays off (quiet — the
+            # schedulable pool is unchanged) until step() issues the wake
+            qmarks = ",".join("?" * len(rids))
+            self.db.execute_quiet(
+                f"UPDATE resources SET wakeAt=? WHERE idResource IN ({qmarks})",
+                [issue_at, *rids])
+            self.stats["wakes"] += len(rids)
+            self._next_event = min(self._next_event, issue_at)
+        return pending + len(rids)
+
+    # -------------------------------------------------------- the energy leg
+    def step(self, now: float | None = None) -> dict:
+        """Deadline-driven power work: issue due wakes, complete due boots,
+        execute deferred sleeps, cancel wakes on retired hosts. Zero SQL
+        when nothing is due — the cost profile the no-op memo needs."""
+        now = self.clock() if now is None else now
+        if now + EPS < self._next_event:
+            return {}
+        report = {"woken": 0, "booted": 0, "slept": 0, "cancelled": 0}
+        rows = self.db.query(
+            "SELECT idResource, hostname, state, power, wakeAt FROM resources "
+            "WHERE wakeAt IS NOT NULL OR power='waking'")
+        issue: dict[int, str] = {}
+        boot_done: list[int] = []
+        cancel: list[int] = []
+        for r in rows:
+            rid, wake_at = r["idResource"], r["wakeAt"]
+            if r["state"] != "Alive":
+                # satellite contract: a host the health tier dropped while
+                # holding a scheduled wake forfeits it — never counted
+                # toward forecast capacity, never woken into quarantine
+                cancel.append(rid)
+            elif r["power"] == POWER_WAKING:
+                if wake_at is not None and wake_at <= now + EPS:
+                    boot_done.append(rid)
+            elif r["power"] == POWER_OFF and wake_at is not None \
+                    and wake_at <= now + EPS:
+                issue[rid] = r["hostname"]
+        if cancel:
+            qmarks = ",".join("?" * len(cancel))
+            # quiet: these hosts are already out of the pool (state did it)
+            self.db.execute_quiet(
+                f"UPDATE resources SET wakeAt=NULL, "
+                f"power=CASE WHEN power='waking' THEN 'off' ELSE power END "
+                f"WHERE idResource IN ({qmarks})", cancel)
+            for rid in cancel:
+                self._wake_retries.pop(rid, None)
+            self.stats["wakes_cancelled"] += len(cancel)
+            report["cancelled"] = len(cancel)
+        if issue:
+            report["woken"] = self._issue_wakes(
+                list(issue), issue, now, scheduled=True)
+        if boot_done:
+            qmarks = ",".join("?" * len(boot_done))
+            with self.db.transaction() as cur:   # pool grows: one real bump
+                cur.execute(
+                    f"UPDATE resources SET power='on', wakeAt=NULL "
+                    f"WHERE idResource IN ({qmarks})", boot_done)
+            self.stats["boots"] += len(boot_done)
+            report["booted"] = len(boot_done)
+            self.db.log_event("energy", "info",
+                              f"{len(boot_done)} node(s) booted")
+            self.db.notify("scheduler")
+        slept = [rid for rid, t in self._sleep_due.items() if t <= now + EPS]
+        if slept:
+            # re-verify against live state: the memo being armed proves the
+            # forecast that scheduled these sleeps still holds; this guards
+            # the unarmed window (assignments or reservations that appeared
+            # since the planning pass)
+            qmarks = ",".join("?" * len(slept))
+            busy = {r["idResource"] for r in self.db.query(
+                f"SELECT a.idResource FROM assignments a "
+                f"JOIN jobs j ON j.idJob=a.idJob "
+                f"WHERE a.idResource IN ({qmarks}) "
+                f"AND j.state IN ('toLaunch','Launching','Running') "
+                f"UNION SELECT g.idResource FROM gantt g "
+                f"JOIN jobs j ON j.idJob=g.idJob "
+                f"WHERE g.idResource IN ({qmarks}) AND j.state='Waiting'",
+                [*slept, *slept])}
+            ok = [rid for rid in slept if rid not in busy]
+            for rid in slept:
+                self._sleep_due.pop(rid, None)
+            if ok:
+                host_of = {r["idResource"]: r["hostname"] for r in self.db.query(
+                    "SELECT idResource, hostname FROM resources "
+                    f"WHERE idResource IN ({','.join('?' * len(ok))})", ok)}
+                report["slept"] = self._sleep_hosts(ok, host_of, now)
+        if report["slept"] or report["booted"]:
+            on = self.db.scalar(
+                "SELECT COUNT(*) FROM resources "
+                "WHERE state='Alive' AND power<>'off'") or 0
+            self._account(now, on)
+        self._recompute_next_event(now)
+        return report
+
+    def next_deadline(self, now: float | None = None) -> float | None:
+        """Earliest instant power work becomes due (scheduled wake issue,
+        boot completion, deferred sleep) — SQL-free, from the cache the
+        planning legs maintain. Clamped to ``now`` like the reaper's: due
+        work that has not run yet must still summon a tick."""
+        if self._next_event == float("inf"):
+            return None
+        if now is not None:
+            return max(self._next_event, now)
+        return self._next_event
+
+    # --------------------------------------------------------------- helpers
+    def _recompute_next_event(self, now: float) -> None:
+        t = min(self._sleep_due.values()) if self._sleep_due else float("inf")
+        rows = self.db.query(
+            "SELECT MIN(wakeAt) AS t FROM resources "
+            "WHERE state='Alive' AND wakeAt IS NOT NULL")
+        if rows and rows[0]["t"] is not None:
+            t = min(t, rows[0]["t"])
+        self._next_event = t
+
+    def _sleep_hosts(self, rids: list[int], host_of: dict[int, str],
+                     now: float) -> int:
+        ok: list[int] = []
+        for rid in rids:
+            if self.transport is not None:
+                try:
+                    self.transport.sleep(host_of[rid])
+                except (TimeoutError, OSError):
+                    # an unreachable host can't be commanded to sleep; the
+                    # monitor sweep owns its fate — skip, retry next pass
+                    self.stats["sleep_failures"] += 1
+                    continue
+            ok.append(rid)
+        if not ok:
+            return 0
+        qmarks = ",".join("?" * len(ok))
+        with self.db.transaction() as cur:   # pool shrinks: one real bump
+            cur.execute(f"UPDATE resources SET power='off', wakeAt=NULL "
+                        f"WHERE idResource IN ({qmarks})", ok)
+        for rid in ok:
+            self._idle_since.pop(rid, None)
+            self._sleep_due.pop(rid, None)
+        self.stats["sleeps"] += len(ok)
+        self.db.log_event("energy", "info",
+                          f"{len(ok)} idle node(s) powered down")
+        return len(ok)
+
+    def _issue_wakes(self, rids: list[int], host_of: dict[int, str],
+                     now: float, *, scheduled: bool = False) -> int:
+        """Send the wake command; success → 'waking' with the boot timer
+        running. Failure → the recovery tier's retry shape: capped
+        exponential backoff on the wake schedule, then hand the host to the
+        health tier (Suspected) when the budget runs out."""
+        ok: list[int] = []
+        failed: list[int] = []
+        give_up: list[int] = []
+        for rid in rids:
+            if self.transport is not None:
+                try:
+                    self.transport.wake(host_of[rid])
+                except (TimeoutError, OSError):
+                    n = self._wake_retries.get(rid, 0) + 1
+                    self._wake_retries[rid] = n
+                    self.stats["wake_failures"] += 1
+                    if n > self.cfg.max_wake_retries:
+                        give_up.append(rid)
+                    else:
+                        failed.append(rid)
+                    continue
+            self._wake_retries.pop(rid, None)
+            ok.append(rid)
+        ready = now + self.cfg.boot_s
+        if ok:
+            qmarks = ",".join("?" * len(ok))
+            with self.db.transaction() as cur:   # pool grows ('waking' hosts
+                cur.execute(                     # are placeable): real bump
+                    f"UPDATE resources SET power='waking', wakeAt=? "
+                    f"WHERE idResource IN ({qmarks})", [ready, *ok])
+            self.stats["wakes"] += len(ok) if not scheduled else 0
+            self._next_event = min(self._next_event, ready)
+            self.db.log_event("energy", "info",
+                              f"{len(ok)} node(s) waking, ready at {ready:.1f}")
+        for rid in failed:
+            retry_at = now + backoff_delay(self._wake_retries[rid] - 1)
+            # still off → quiet; the retry only moves the wake schedule
+            self.db.execute_quiet(
+                "UPDATE resources SET wakeAt=? WHERE idResource=?",
+                (retry_at, rid))
+            self._next_event = min(self._next_event, retry_at)
+        if give_up:
+            qmarks = ",".join("?" * len(give_up))
+            with self.db.transaction() as cur:
+                cur.execute(
+                    f"UPDATE resources SET state='Suspected', wakeAt=NULL "
+                    f"WHERE idResource IN ({qmarks}) AND state='Alive'",
+                    give_up)
+            for rid in give_up:
+                self._wake_retries.pop(rid, None)
+            self.db.log_event(
+                "energy", "error",
+                "wake failed after retries, hosts suspected: "
+                + ",".join(host_of[r] for r in give_up))
+            self.db.notify("monitor")
+        return len(ok)

@@ -91,6 +91,17 @@ class SimTransport:
         """Remote execution cost (the command itself runs asynchronously)."""
         return self.connect(host)
 
+    # power ops for the energy tier (core/energy.py). Both ride the same
+    # failure model as deployment: an unreachable host times out its wake
+    # (BMC down with the host) and the planner's retry/backoff path owns
+    # what happens next. BlockingTransport inherits the blocking behaviour
+    # through its overridden connect().
+    def wake(self, host: str) -> float:
+        return self.connect(host)
+
+    def sleep(self, host: str) -> float:
+        return self.connect(host)
+
 
 @dataclass
 class BlockingTransport(SimTransport):
@@ -498,8 +509,14 @@ class Executor:
         so a host flapping faster than the probation window never re-enters
         the pool — and never bumps ``Database.generation`` while it flaps.
         """
+        # powered-off hosts are deliberately unreachable — sweeping them
+        # would suspect every host the energy planner put to sleep. The
+        # exception is Suspected+off (a forfeited boot): probing is the only
+        # way such a host ever rejoins the pool, so it stays on the sweep
         hosts = [r["hostname"] for r in self.db.query(
-            "SELECT hostname FROM resources WHERE state NOT IN ('Absent','Dead')")]
+            "SELECT hostname FROM resources "
+            "WHERE state NOT IN ('Absent','Dead') "
+            "AND (power<>'off' OR state='Suspected')")]
         rep = self.launcher.check_hosts(hosts)
         self._mark_dead(rep.failed)
         if rep.reached:
@@ -541,7 +558,9 @@ class Executor:
         rmarks = ",".join("?" * len(rids))
         with self.db.transaction() as cur:  # the one legitimate bump: the
             cur.execute(                    # usable pool actually grew
-                f"UPDATE resources SET state='Alive' "
+                # power='on': the host answered PROBATION_SWEEPS probes —
+                # it is demonstrably up, whatever a forfeited boot left here
+                f"UPDATE resources SET state='Alive', power='on', wakeAt=NULL "
                 f"WHERE idResource IN ({rmarks})", rids)
         self.db.execute_quiet(
             f"UPDATE resource_health SET health=MIN(1.0, health+?), "
@@ -578,6 +597,17 @@ class Executor:
             # transition already failed the jobs and woke the scheduler
             cur.execute(f"UPDATE resources SET state='Suspected' "
                         f"WHERE hostname IN ({nmarks})", newly)
+        # a host dropped while holding a scheduled wake-up forfeits it: the
+        # energy planner must never count quarantined capacity toward its
+        # forecast, and a retired flapper must not boot back into the pool.
+        # Quiet: the Suspected transition above already removed the host
+        # from every mask — clearing its power bookkeeping changes nothing
+        # the scheduler can see.
+        self.db.execute_quiet(
+            f"UPDATE resources SET wakeAt=NULL, "
+            f"power=CASE WHEN power='waking' THEN 'off' ELSE power END "
+            f"WHERE hostname IN ({nmarks}) "
+            f"AND (wakeAt IS NOT NULL OR power='waking')", newly)
         # health bookkeeping for the flap (quiet: telemetry, not pool state)
         self.db.execute_quiet(
             f"INSERT OR IGNORE INTO resource_health(idResource, lastChange) "

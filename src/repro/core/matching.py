@@ -64,7 +64,10 @@ def match_resources(db, properties: str, *, min_weight: int = 1,
     sql = "SELECT idResource FROM resources WHERE weight >= ?"
     params: list = [min_weight]
     if alive_only:
-        sql += " AND state='Alive'"
+        # the power gate rides with aliveness: a powered-off host is exactly
+        # as unplaceable as a dead one until the energy planner wakes it
+        # ('waking' hosts stay in — their slot is delayed, not their bit)
+        sql += " AND state='Alive' AND power<>'off'"
     if besteffort:
         sql += " AND besteffort_ok=1"
     if expr:

@@ -106,7 +106,7 @@ class PassCache:
                 self.index,
                 ((r["idResource"], r["pod"], r["switch"]) for r in self.db.query(
                     "SELECT idResource, pod, switch FROM resources "
-                    "WHERE state='Alive'")))
+                    "WHERE state='Alive' AND power<>'off'")))
         return self._hierarchy
 
     def compiled(self, request_json: str) -> list:
@@ -141,12 +141,17 @@ class PassCache:
 
 
 class MetaScheduler:
-    def __init__(self, db, *, clock=None, besteffort_victim_policy: str = "youngest_first"):
+    def __init__(self, db, *, clock=None, besteffort_victim_policy: str = "youngest_first",
+                 energy=None):
         self.db = db
         self.clock = clock or _time.time
         # §3.3: "choice policies for the job to cancel (for instance by
         # startup date order [...] or by the number of used nodes)"
         self.besteffort_victim_policy = besteffort_victim_policy
+        # energy tier (core/energy.py): when set, each full pass ends with
+        # the sleep/wake planner walking the Gantt it just built. None = the
+        # tier is off and every host is treated as always powered.
+        self.energy = energy
         self.stats = {"passes": 0, "noop_passes": 0}
         self.gantt_slots = 0   # timeline length after the latest full pass
         # dirty-flag fast path (see module docstring): armed only by a pass
@@ -184,18 +189,35 @@ class MetaScheduler:
         generation0 = self.db.generation
         summary = {"now": now, "launched": [], "reservations": [], "preempted": []}
 
-        alive = self._alive_resources()
+        alive, waking = self._powered_pool()
         gantt = self._build_gantt(alive, now)
+        # boot latency charged where it belongs: a 'waking' host is a full
+        # member of every candidate mask, but its timeline is occupied until
+        # the modelled boot completes — a job claiming it is delayed by the
+        # remainder of the boot, the pass itself never blocks on a wake
+        by_ready: dict[float, set[int]] = {}
+        for rid, ready in waking.items():
+            if ready > now + EPS:
+                by_ready.setdefault(ready, set()).add(rid)
+        for ready, rids in by_ready.items():
+            gantt.occupy(rids, now, ready)
         cache = PassCache(self.db, gantt.index)
         self._init_quotas(cache, now)
         self._schedule_reservations(gantt, cache, now, summary)
-        placements = self._schedule_queues(gantt, cache, now, summary)
+        placements, views = self._schedule_queues(gantt, cache, now, summary)
         # timeline length after planning the whole backlog — the number the
         # lazy coalescing pass in gantt.py keeps bounded (ROADMAP follow-on);
         # benchmarks/scale.py records it per pass
         self.gantt_slots = len(gantt.slots)
         self._launch_due(placements, now, summary)
         self._preempt_besteffort(cache, placements, now, summary)
+        if self.energy is not None:
+            # the planner reads the post-placement forecast: hosts idle across
+            # the whole timeline are sleep candidates, demand the powered pool
+            # deferred past a boot summons wakes. Its transitions are ordinary
+            # bumping writes, so a pass that slept/woke anything simply does
+            # not arm — the memo stays exact.
+            self.energy.plan(gantt, now, placements=placements, views=views)
         if self.db.generation == generation0:
             # the pass wrote nothing: the DB we read is the DB we leave, so
             # the (empty) outcome is reusable until a write or a granted
@@ -295,8 +317,24 @@ class MetaScheduler:
 
     # ----------------------------------------------------------- gantt init
     def _alive_resources(self) -> set[int]:
-        return {r["idResource"] for r in
-                self.db.query("SELECT idResource FROM resources WHERE state='Alive'")}
+        return {r["idResource"] for r in self.db.query(
+            "SELECT idResource FROM resources "
+            "WHERE state='Alive' AND power<>'off'")}
+
+    def _powered_pool(self) -> tuple[set[int], dict[int, float]]:
+        """The schedulable pool and its boot debt: ids of every Alive host
+        that is powered ('on' or 'waking' — a powered-off bit never enters
+        a placement mask), plus ``{rid: boot-completion}`` for the waking
+        ones so the pass can occupy their Gantt slots."""
+        pool: set[int] = set()
+        waking: dict[int, float] = {}
+        for r in self.db.query(
+                "SELECT idResource, power, wakeAt FROM resources "
+                "WHERE state='Alive' AND power<>'off'"):
+            pool.add(r["idResource"])
+            if r["power"] == "waking" and r["wakeAt"] is not None:
+                waking[r["idResource"]] = r["wakeAt"]
+        return pool, waking
 
     def _build_gantt(self, alive: set[int], now: float) -> Gantt:
         gantt = Gantt(alive, now)
@@ -350,6 +388,17 @@ class MetaScheduler:
             fit = find_fit(gantt, view, None,
                            exact_start=max(start_req, now), use_prefer=False)
             if fit is None:
+                # before refusing, ask the energy tier: powered-down hosts
+                # are invisible to the Gantt, and a reservation is exactly
+                # the demand signal worth booting for. A scheduled/pending
+                # wake keeps the job negotiating (a later pass sees the
+                # booted hosts); only a genuinely empty reserve refuses.
+                if self.energy is not None:
+                    need = (min(a.min_hosts for a in view.alternatives)
+                            if view.alternatives else view.nbNodes)
+                    if self.energy.request_capacity(
+                            need, now, ready_by=max(start_req, now)):
+                        continue
                 self._to_error(job["idJob"],
                                "reservation slot unavailable", now)
                 continue
@@ -457,9 +506,10 @@ class MetaScheduler:
         return views
 
     def _schedule_queues(self, gantt: Gantt, cache: PassCache, now: float,
-                         summary: dict) -> list[Placement]:
+                         summary: dict) -> tuple[list[Placement], list[JobView]]:
         placements: list[Placement] = []
-        queues = self.db.query(
+        views: list[JobView] = []   # everything considered — the energy
+        queues = self.db.query(     # planner's demand signal
             "SELECT queueName, policy, moldable, priority FROM queues "
             "WHERE state='Active' ORDER BY priority DESC, queueName")
         # karma is pass-scoped and only priced when a fairshare queue will
@@ -473,9 +523,10 @@ class MetaScheduler:
                                     karma_map=karma)
             if not jobs:
                 continue
+            views.extend(jobs)
             policy = get_policy(q["policy"])
             placements.extend(policy(gantt, jobs, now))
-        return placements
+        return placements, views
 
     def _launch_due(self, placements: list[Placement], now: float, summary: dict) -> None:
         for p in placements:

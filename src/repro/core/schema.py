@@ -62,7 +62,16 @@ CREATE TABLE IF NOT EXISTS resources (
     switch       TEXT NOT NULL DEFAULT 'sw0',
     mem_gb       INTEGER NOT NULL DEFAULT 16,
     chip         TEXT NOT NULL DEFAULT 'tpu-v5e',
-    besteffort_ok INTEGER NOT NULL DEFAULT 1
+    besteffort_ok INTEGER NOT NULL DEFAULT 1,
+    -- energy tier (core/energy.py): power is a resource property the
+    -- selector compiles against, orthogonal to health (a host can be Alive
+    -- yet asleep). 'off' bits never enter a placement mask; 'waking' hosts
+    -- are schedulable but their Gantt slot is occupied until wakeAt (the
+    -- modelled boot completes). wakeAt: for 'off' hosts, the scheduled
+    -- instant the wake command should be ISSUED (NULL = no wake planned);
+    -- for 'waking' hosts, the instant the boot COMPLETES.
+    power        TEXT NOT NULL DEFAULT 'on',     -- on | off | waking
+    wakeAt       REAL
 )
 """
 
@@ -233,6 +242,15 @@ QUEUES_MIGRATIONS = [
                  "NOT NULL DEFAULT 'first'"),
 ]
 
+# Energy tier: stores created before the power columns gain them on reopen,
+# defaulting every existing host to powered-on — reopening an old store
+# changes nothing about what is schedulable.
+RESOURCES_MIGRATIONS = [
+    ("power", "ALTER TABLE resources ADD COLUMN power TEXT "
+              "NOT NULL DEFAULT 'on'"),
+    ("wakeAt", "ALTER TABLE resources ADD COLUMN wakeAt REAL"),
+]
+
 
 def apply_migrations(db) -> None:
     """Bring a reopened store up to this code version: add any jobs/queues
@@ -253,6 +271,12 @@ def apply_migrations(db) -> None:
     if missing_q:
         with db.transaction() as cur:
             for ddl in missing_q:
+                cur.execute(ddl)
+    have_r = {r["name"] for r in db.query("PRAGMA table_info(resources)")}
+    missing_r = [ddl for col, ddl in RESOURCES_MIGRATIONS if col not in have_r]
+    if missing_r:
+        with db.transaction() as cur:
+            for ddl in missing_r:
                 cur.execute(ddl)
     # upgrade default rules whose text was superseded (exact match only, so
     # administrator-edited rules are never touched)

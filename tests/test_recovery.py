@@ -397,3 +397,62 @@ def test_execute_quiet_and_statetime_stamp():
     jobstate.set_state(db, jid, jobstate.HOLD)
     assert db.scalar("SELECT stateTime FROM jobs WHERE idJob=?", (jid,)) \
         == 42.0
+
+
+# ----------------------------------------------------- energy x health
+def test_dead_host_forfeits_pending_wake():
+    """Satellite contract: a host the health tier drops while mid-boot must
+    forfeit the wake — waking→off, wakeAt cleared — so the planner never
+    counts a boot that will not come toward forecast capacity."""
+    db, tr, ex = _monitored_cluster(("h0", "h1"))
+    db.execute("UPDATE resources SET power='waking', wakeAt=500.0 "
+               "WHERE hostname='h1'")
+    tr.failed_hosts.add("h1")
+    ex.monitor_nodes()
+    row = db.query_one("SELECT state, power, wakeAt FROM resources "
+                       "WHERE hostname='h1'")
+    assert row["state"] == "Suspected"
+    assert row["power"] == "off" and row["wakeAt"] is None
+
+
+def test_energy_step_cancels_wake_on_retired_host():
+    """Belt-and-braces in the energy leg itself: a quarantined host still
+    holding a scheduled wake has it cancelled (quietly) the next time any
+    power work runs — it is never woken into quarantine."""
+    from repro.core.energy import EnergyModule
+    db = connect()
+    api.add_resources(db, ["h0", "h1", "h2"])
+    em = EnergyModule(db, clock=lambda: 1000.0)
+    db.execute("UPDATE resources SET power='off', wakeAt=900.0 "
+               "WHERE hostname IN ('h1','h2')")
+    db.execute("UPDATE resources SET state='Dead' WHERE hostname='h1'")
+    em._recompute_next_event(800.0)
+    report = em.step(1000.0)
+    assert report["cancelled"] == 1 and em.stats["wakes_cancelled"] == 1
+    dead = db.query_one("SELECT power, wakeAt FROM resources "
+                        "WHERE hostname='h1'")
+    assert dead["power"] == "off" and dead["wakeAt"] is None
+    live = db.query_one("SELECT power, wakeAt FROM resources "
+                        "WHERE hostname='h2'")
+    assert live["power"] == "waking"
+    assert abs(live["wakeAt"] - (1000.0 + em.cfg.boot_s)) < 1e-9
+
+
+def test_forfeited_boot_host_recovers_through_probation():
+    """The flap-dampened health automaton x power: a Suspected+off host (a
+    forfeited boot) stays on the monitor sweep, serves its probation, and
+    returns Alive AND powered on — answering probes proves it is up."""
+    db, tr, ex = _monitored_cluster(("h0", "h1"))
+    db.execute("UPDATE resources SET power='waking', wakeAt=500.0 "
+               "WHERE hostname='h1'")
+    tr.failed_hosts.add("h1")
+    ex.monitor_nodes()                     # boot fails: Suspected + off
+    tr.failed_hosts.discard("h1")
+    ex.monitor_nodes()                     # probation 1
+    assert db.scalar("SELECT state FROM resources WHERE hostname='h1'") \
+        == "Suspected"
+    ex.monitor_nodes()                     # probation 2: served its time
+    row = db.query_one("SELECT state, power, wakeAt FROM resources "
+                       "WHERE hostname='h1'")
+    assert row["state"] == "Alive"
+    assert row["power"] == "on" and row["wakeAt"] is None

@@ -14,6 +14,8 @@ from repro.core.traces import (SWFJob, SWFTrace, emit_swf, normalize_trace,
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 FIXTURE = os.path.join(REPO_ROOT, "benchmarks", "data", "mini_cluster.swf")
+KTH_FIXTURE = os.path.join(REPO_ROOT, "benchmarks", "data",
+                           "kth_sp2_standin.swf")
 
 # shim-compatible field strategies (ints bounded well under 2**53 so the
 # float hop in the int-column parser stays exact)
@@ -180,3 +182,44 @@ def test_swf_replay_matches_golden_signature():
     assert r.virtual_makespan_s == golden["virtual_makespan_s"]
     assert r.signature == golden["sha256"], \
         "SWF replay schedule diverged from the pinned golden baseline"
+
+
+# ------------------------------------------------------- KTH-SP2 data drop
+def test_kth_standin_is_regenerable_from_the_seeded_generator():
+    """The bundled KTH-SP2 stand-in (100-processor SP2 shape, ~60% offered
+    load at natural arrival rate) must equal the seeded generator output —
+    same no-silent-hand-edits contract as the mini_cluster fixture. The
+    real archive log is fetched by benchmarks/data/fetch_kth_sp2.py on
+    hosts with network; the stand-in is what the golden signature pins."""
+    with open(KTH_FIXTURE) as fh:
+        assert fh.read() == emit_swf(synthetic_swf(
+            900, seed=1996, max_procs=100, mean_interarrival=620.0,
+            n_users=60, n_groups=10))
+
+
+def test_kth_standin_parses_clean():
+    trace = traces.load_swf(KTH_FIXTURE)
+    assert len(trace.jobs) == 900 and trace.skipped == 0
+    assert any("MaxProcs: 100" in h for h in trace.header)
+    assert all(j.req_procs <= 100 for j in trace.jobs)
+
+
+def test_kth_replay_matches_golden_signature():
+    """First 150 jobs of the stand-in on the 100-node simulator — the
+    second determinism anchor, pinned in tests/golden/kth_sp2.json and
+    cross-checked by the CI trace-replay-smoke guard."""
+    from benchmarks.swf_replay import (KTH_GOLDEN_JOBS, KTH_GOLDEN_LOAD,
+                                       KTH_NODES, KTH_TRACE, replay)
+    with open(os.path.join(GOLDEN_DIR, "kth_sp2.json")) as fh:
+        golden = json.load(fh)
+    r = replay(max_jobs=KTH_GOLDEN_JOBS, load_scale=KTH_GOLDEN_LOAD,
+               nodes=KTH_NODES, trace_path=KTH_TRACE)
+    assert r.submitted == golden["submitted"]
+    assert r.skipped == golden["skipped"]
+    assert r.terminal == golden["terminal"] == r.submitted  # 100% terminal
+    assert r.completed == golden["completed"]
+    assert r.failed == golden["failed"]
+    assert r.utilisation == golden["utilisation"]
+    assert r.virtual_makespan_s == golden["virtual_makespan_s"]
+    assert r.signature == golden["sha256"], \
+        "KTH-SP2 stand-in replay diverged from the pinned golden baseline"
